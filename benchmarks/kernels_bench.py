@@ -1,0 +1,45 @@
+"""Kernel-layer microbenchmarks.
+
+interpret=True Pallas timing is meaningless (Python emulation), so the
+numbers reported here are (a) the jnp reference path wall time on CPU
+(the compute the kernel replaces, as a correctness-checked baseline)
+and (b) the analytic VMEM-roofline µs the Pallas kernel targets on a
+v5e (bytes / 819 GB/s), which is what the kernel's BlockSpec tiling is
+sized for.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels import ref
+
+HBM_BW = 819e9
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for (n, w) in ((4096, 512), (16384, 1024), (65536, 2048)):
+        rows = jnp.asarray(rng.integers(0, 2**32, (n, w),
+                                        dtype=np.uint32))
+        cov = jnp.asarray(rng.integers(0, 2**32, (w,), dtype=np.uint32))
+        fn = jax.jit(ref.marginal_gain_ref)
+        t = timeit(fn, rows, cov)
+        bytes_moved = n * w * 4
+        target_us = bytes_moved / HBM_BW * 1e6
+        emit(f"kernels/coverage_ref_cpu/n={n},w={w}", t * 1e6,
+             f"tpu_roofline_target_us={target_us:.1f} "
+             f"GBps_cpu={bytes_moved/t/1e9:.1f}")
+    covers = jnp.asarray(rng.integers(0, 2**32, (63, 2048),
+                                      dtype=np.uint32))
+    row = jnp.asarray(rng.integers(0, 2**32, (2048,), dtype=np.uint32))
+    fn = jax.jit(ref.bucket_gains_ref)
+    t = timeit(fn, row, covers)
+    emit("kernels/bucket_ref_cpu/B=63,w=2048", t * 1e6,
+         f"tpu_roofline_target_us={63*2048*4/HBM_BW*1e6:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Summarize dry-run JSON into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report dryrun_results.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def main(path: str = "dryrun_results.json"):
+    with open(path) as f:
+        records = json.load(f)
+    # keep the newest record per cell (reruns supersede)
+    dedup = {}
+    for r in records:
+        dedup[(r.get("arch"), r.get("shape"), r.get("mesh"))] = r
+    records = sorted(dedup.values(),
+                     key=lambda r: (str(r.get("arch")),
+                                    str(r.get("shape")),
+                                    str(r.get("mesh"))))
+    print("| arch | shape | mesh | peak GiB/dev | compute s | memory s "
+          "| coll s | dominant | useful-flops |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in records:
+        if "error" in r:
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"ERROR: {r['error'][:60]} | | | | | |")
+            continue
+        mem = r.get("memory", {})
+        ro = r.get("roofline")
+        if ro:
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"{fmt_bytes(mem.get('peak_bytes', 0))} | "
+                  f"{ro['compute_s']:.4f} | {ro['memory_s']:.4f} | "
+                  f"{ro['collective_s']:.4f} | {ro['dominant']} | "
+                  f"{ro['useful_flops_frac']:.2f} |")
+        else:
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"{fmt_bytes(mem.get('peak_bytes', 0))} | - | - | - | "
+                  f"compile-only | - |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json")

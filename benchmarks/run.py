@@ -1,0 +1,32 @@
+"""Benchmark harness: one module per paper table + kernels.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Roofline terms for the
+architecture cells come from the dry-run (launch/dryrun.py --all) and
+are summarized by benchmarks/roofline_report.py from its JSON output.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (comm_opt, kernels_bench,
+                            table2_local_vs_global, table4_compare,
+                            table5_scaling, table6_opim)
+    print("name,us_per_call,derived")
+    ok = True
+    for mod in (table2_local_vs_global, table4_compare, table5_scaling,
+                table6_opim, comm_opt, kernels_bench):
+        try:
+            mod.main()
+        except Exception:  # noqa: BLE001 — report and continue
+            ok = False
+            print(f"{mod.__name__},ERROR,", flush=True)
+            traceback.print_exc()
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

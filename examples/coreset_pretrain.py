@@ -1,0 +1,56 @@
+"""GreediRIS at the data layer: streaming max-cover coreset selection.
+
+Trains two tiny LMs for a handful of steps — one on randomly chosen
+documents, one on documents chosen by the paper's streaming max-k-cover
+(n-gram coverage objective) — and reports the token-diversity and loss
+trajectories.  This is the arch-applicability integration described in
+DESIGN.md §5.
+
+    PYTHONPATH=src python examples/coreset_pretrain.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import CoresetSelector, DataConfig, TokenPipeline
+from repro.models import model as model_lib
+from repro.optim.adamw import OptConfig
+
+STEPS, BATCH, SEQ = 8, 8, 64
+
+cfg = get_config("gemma-7b", smoke=True)
+opt = OptConfig(lr=1e-3, warmup_steps=2, total_steps=STEPS)
+pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=SEQ,
+                                global_batch=BATCH * 4, seed=0,
+                                repeat_p=0.6))
+selector = CoresetSelector(universe=2048)
+
+
+def batches(select: bool):
+    for step in range(STEPS):
+        pool = np.asarray(pipe.batch(step))
+        if select:
+            idx, cov = selector.select(pool, BATCH)
+            idx = list(idx)[:BATCH]
+            idx += [i for i in range(len(pool)) if i not in idx][
+                : BATCH - len(idx)]
+        else:
+            idx, cov = list(range(BATCH)), -1
+        yield jnp.asarray(pool[np.asarray(idx)]), cov
+
+
+for mode in ("random", "coreset"):
+    bundle = model_lib.build(cfg, opt, sharded=False)
+    state, _ = bundle.init_state(jax.random.key(0))
+    step_fn = jax.jit(bundle.train_step())
+    losses, uniq = [], []
+    for tokens, cov in batches(mode == "coreset"):
+        state, metrics = step_fn(state, {"tokens": tokens})
+        losses.append(float(metrics["loss"]))
+        uniq.append(len(np.unique(np.asarray(tokens))))
+    print(f"{mode:8s} mean-unique-tokens/batch={np.mean(uniq):7.1f} "
+          f"loss: {losses[0]:.3f} -> {losses[-1]:.3f}")
+print("coreset batches should show higher unique-token coverage — the "
+      "submodular objective the paper optimizes, applied to data "
+      "selection.")

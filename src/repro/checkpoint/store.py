@@ -1,0 +1,151 @@
+"""Sharded checkpointing with async writes, manifests, and integrity.
+
+No orbax in the offline container — this is a self-contained store:
+
+* every process (in a real multi-host job) writes only its addressable
+  shards; here the single host writes everything;
+* a step directory is written to ``<root>/step_<n>.tmp`` then renamed
+  (atomic publish) and recorded in MANIFEST.json with per-file CRC32;
+* writes run on a background thread (double-buffered: the arrays are
+  device_get'd synchronously — cheap relative to a training step — and
+  serialized asynchronously) so the train loop is not I/O bound;
+* ``restore`` loads the newest intact step, verifying CRCs, and
+  re-shards onto the current mesh — restarts may use a different
+  device count (elastic restart), which is safe because array global
+  shapes are mesh-independent.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import zlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointStore:
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+        self._q: "queue.Queue" = queue.Queue(maxsize=2)
+        self._worker = threading.Thread(target=self._writer_loop,
+                                        daemon=True)
+        self._worker.start()
+        self._error: Optional[BaseException] = None
+
+    # ------------------------- write path -------------------------
+
+    def save(self, step: int, tree: Any, blocking: bool = False):
+        """Snapshot (device_get) and enqueue for background write."""
+        if self._error:
+            raise self._error
+        leaves, treedef = _flatten(tree)
+        host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+        self._q.put((step, host_leaves, treedef))
+        if blocking:
+            self._q.join()
+
+    def wait(self):
+        self._q.join()
+        if self._error:
+            raise self._error
+
+    def _writer_loop(self):
+        while True:
+            step, leaves, treedef = self._q.get()
+            try:
+                self._write(step, leaves, treedef)
+            except BaseException as e:  # surfaced on next save()
+                self._error = e
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, leaves, treedef):
+        tmp = os.path.join(self.root, f"step_{step:09d}.tmp")
+        final = os.path.join(self.root, f"step_{step:09d}")
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "num_leaves": len(leaves),
+                    "treedef": str(treedef), "files": {}}
+        for i, arr in enumerate(leaves):
+            fn = f"leaf_{i:05d}.npy"
+            path = os.path.join(tmp, fn)
+            # numpy can't roundtrip ml_dtypes (bfloat16, fp8): store a
+            # same-width integer view; the manifest records the truth.
+            if arr.dtype.kind not in "biufc":
+                np.save(path, arr.view(f"u{arr.dtype.itemsize}"))
+            else:
+                np.save(path, arr)
+            with open(path, "rb") as f:
+                crc = zlib.crc32(f.read())
+            manifest["files"][fn] = {"crc32": crc,
+                                     "shape": list(arr.shape),
+                                     "dtype": str(arr.dtype)}
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)           # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.list_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    # ------------------------- read path -------------------------
+
+    def list_steps(self):
+        out = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.root, name,
+                                               "MANIFEST.json")):
+                    out.append(int(name[5:]))
+        return sorted(out)
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None):
+        """Load into the structure of ``template``; verify CRCs.
+        Returns (tree, step) or (None, -1) when no checkpoint exists."""
+        steps = self.list_steps()
+        if not steps:
+            return None, -1
+        step = step if step is not None else steps[-1]
+        d = os.path.join(self.root, f"step_{step:09d}")
+        with open(os.path.join(d, "MANIFEST.json")) as f:
+            manifest = json.load(f)
+        leaves, treedef = _flatten(template)
+        assert manifest["num_leaves"] == len(leaves), \
+            "checkpoint/model structure mismatch"
+        out = []
+        shard_leaves = (jax.tree.flatten(shardings)[0]
+                        if shardings is not None else [None] * len(leaves))
+        for i in range(len(leaves)):
+            fn = f"leaf_{i:05d}.npy"
+            path = os.path.join(d, fn)
+            with open(path, "rb") as f:
+                crc = zlib.crc32(f.read())
+            if crc != manifest["files"][fn]["crc32"]:
+                raise IOError(f"CRC mismatch in {path}")
+            arr = np.load(path)
+            want = manifest["files"][fn]["dtype"]
+            if str(arr.dtype) != want:
+                import ml_dtypes  # jax dependency; maps bf16/fp8 names
+                arr = arr.view(np.dtype(getattr(ml_dtypes, want, want)))
+            if shard_leaves[i] is not None:
+                out.append(jax.device_put(arr, shard_leaves[i]))
+            else:
+                out.append(jax.device_put(arr))
+        return jax.tree.unflatten(treedef, out), step

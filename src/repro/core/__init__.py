@@ -1,0 +1,1 @@
+"""GreediRIS core: the paper's contribution as composable JAX modules."""

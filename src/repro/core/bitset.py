@@ -1,0 +1,78 @@
+"""Packed-bitset algebra for coverage computations.
+
+An incidence matrix X over (n vertices x theta samples) is stored as
+uint32 words: X[v, w] has bit j set iff vertex v appears in RRR sample
+(w * 32 + j).  All max-cover algebra (union, marginal gain, coverage
+count) becomes word-parallel AND/OR/ANDNOT + popcount, which lowers to
+the TPU VPU's native population-count path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD_BITS = 32
+WORD_DTYPE = jnp.uint32
+
+
+def num_words(num_bits: int) -> int:
+    """Number of uint32 words needed to hold ``num_bits`` bits."""
+    return (int(num_bits) + WORD_BITS - 1) // WORD_BITS
+
+
+def pack_bool_matrix(dense: jnp.ndarray) -> jnp.ndarray:
+    """Pack a bool matrix [n, theta] into uint32 words [n, ceil(theta/32)].
+
+    Bit j of word w corresponds to column (w * 32 + j).
+    """
+    n, theta = dense.shape
+    w = num_words(theta)
+    pad = w * WORD_BITS - theta
+    if pad:
+        dense = jnp.pad(dense, ((0, 0), (0, pad)))
+    bits = dense.reshape(n, w, WORD_BITS).astype(WORD_DTYPE)
+    shifts = jnp.arange(WORD_BITS, dtype=WORD_DTYPE)
+    return jnp.sum(bits << shifts[None, None, :], axis=-1, dtype=WORD_DTYPE)
+
+
+def unpack_words(words: jnp.ndarray, theta: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_bool_matrix` -> bool [n, theta]."""
+    shifts = jnp.arange(WORD_BITS, dtype=WORD_DTYPE)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(*words.shape[:-1], words.shape[-1] * WORD_BITS)
+    return flat[..., :theta].astype(bool)
+
+
+def popcount(words: jnp.ndarray) -> jnp.ndarray:
+    """Per-word population count (uint32 in, int32 out)."""
+    return jax.lax.population_count(words).astype(jnp.int32)
+
+
+def coverage_size(words: jnp.ndarray) -> jnp.ndarray:
+    """Total number of set bits along the last (word) axis."""
+    return jnp.sum(popcount(words), axis=-1)
+
+
+def marginal_gain(rows: jnp.ndarray, covered: jnp.ndarray) -> jnp.ndarray:
+    """popcount(rows & ~covered) summed over words.
+
+    rows: [..., W] candidate covering sets; covered: [W] current union.
+    Returns int32 [...] marginal gains.  (Pure-jnp reference; the Pallas
+    kernel in ``repro.kernels.coverage`` implements the same contraction.)
+    """
+    return jnp.sum(popcount(rows & ~covered), axis=-1)
+
+
+def union(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return a | b
+
+
+def pack_indices(indices: np.ndarray, theta: int) -> np.ndarray:
+    """NumPy helper: pack a list of sample indices into a word row."""
+    w = num_words(theta)
+    row = np.zeros(w, dtype=np.uint32)
+    idx = np.asarray(indices, dtype=np.int64)
+    np.bitwise_or.at(row, idx // WORD_BITS,
+                     np.uint32(1) << (idx % WORD_BITS).astype(np.uint32))
+    return row

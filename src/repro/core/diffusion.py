@@ -1,0 +1,111 @@
+"""Diffusion models (IC / LT) and Monte-Carlo influence estimation.
+
+Used for (a) the quality metric of the paper's §4 (average activations
+over simulations of the diffusion process from a seed set) and (b) as
+the semantic ground truth the RRR sampler must agree with (property
+tests check E[sigma({v})] ~ theta-frequency of v in RRR sets).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.csr import CSRGraph, padded_adjacency
+
+Model = Literal["IC", "LT"]
+
+
+def _forward_padded(g: CSRGraph):
+    """Forward (out-edge) padded adjacency for simulating spread.
+
+    The CSR container stores reverse edges (in-neighbors); simulation
+    walks forward, so we transpose once on host.
+    """
+    import numpy as np
+    n = g.num_vertices
+    indptr = np.asarray(g.indptr)
+    idx = np.asarray(g.indices)
+    p = np.asarray(g.probs)
+    w = np.asarray(g.weights)
+    out_lists = [[] for _ in range(n)]
+    for v in range(n):
+        for e in range(indptr[v], indptr[v + 1]):
+            out_lists[idx[e]].append((v, p[e], w[e]))
+    d = max((len(l) for l in out_lists), default=0)
+    nbr = np.full((n, max(d, 1)), -1, dtype=np.int32)
+    prob = np.zeros((n, max(d, 1)), dtype=np.float32)
+    wt = np.zeros((n, max(d, 1)), dtype=np.float32)
+    for u, lst in enumerate(out_lists):
+        for j, (v, pj, wj) in enumerate(lst):
+            nbr[u, j], prob[u, j], wt[u, j] = v, pj, wj
+    return jnp.asarray(nbr), jnp.asarray(prob), jnp.asarray(wt)
+
+
+@functools.partial(jax.jit, static_argnames=("model", "num_sims", "max_steps"))
+def _simulate(nbr, prob, wt, rev_nbr, rev_wt, seeds_mask, key, *,
+              model: str, num_sims: int, max_steps: int):
+    n = nbr.shape[0]
+
+    def one_sim(k):
+        if model == "IC":
+            def body(state):
+                frontier, active, kk, step = state
+                kk, sub = jax.random.split(kk)
+                coins = jax.random.uniform(sub, (n, nbr.shape[1]))
+                # u in frontier tries to activate out-neighbor v once.
+                fire = frontier[:, None] & (coins < prob) & (nbr >= 0)
+                tgt = jnp.where(nbr >= 0, nbr, n)
+                hit = jnp.zeros(n + 1, dtype=bool).at[tgt.reshape(-1)].max(
+                    fire.reshape(-1))[:n]
+                new = hit & ~active
+                return new, active | new, kk, step + 1
+
+            def cond(state):
+                frontier, _, _, step = state
+                return jnp.any(frontier) & (step < max_steps)
+
+            frontier0 = seeds_mask
+            _, active, _, _ = jax.lax.while_loop(
+                cond, body, (frontier0, seeds_mask, k, 0))
+            return jnp.sum(active)
+        else:  # LT: vertex thresholds tau ~ U(0,1); activate when
+            # sum of active in-neighbor weights >= tau.
+            tau = jax.random.uniform(k, (n,))
+
+            def body(state):
+                active, step = state
+                act_src = jnp.where(rev_nbr >= 0, active[
+                    jnp.clip(rev_nbr, 0)], False)
+                mass = jnp.sum(jnp.where(act_src, rev_wt, 0.0), axis=1)
+                new_active = active | (mass >= tau)
+                return new_active, step + 1
+
+            def cond(state):
+                active, step = state
+                act_src = jnp.where(rev_nbr >= 0, active[
+                    jnp.clip(rev_nbr, 0)], False)
+                mass = jnp.sum(jnp.where(act_src, rev_wt, 0.0), axis=1)
+                grew = jnp.any((mass >= tau) & ~active)
+                return grew & (step < max_steps)
+
+            active, _ = jax.lax.while_loop(cond, body, (seeds_mask, 0))
+            return jnp.sum(active)
+
+    keys = jax.random.split(key, num_sims)
+    counts = jax.lax.map(one_sim, keys)
+    return jnp.mean(counts.astype(jnp.float32))
+
+
+def influence(g: CSRGraph, seeds, key, model: Model = "IC",
+              num_sims: int = 64, max_steps: int = 64) -> jnp.ndarray:
+    """Monte-Carlo estimate of sigma(seeds) under the diffusion model."""
+    n = g.num_vertices
+    nbr, prob, _wt = _forward_padded(g)
+    rev_nbr, _rev_prob, rev_wt = padded_adjacency(g)
+    seeds = jnp.asarray(seeds)
+    seeds_mask = jnp.zeros(n, dtype=bool).at[seeds].set(True)
+    return _simulate(nbr, prob, _wt, rev_nbr, rev_wt, seeds_mask, key,
+                     model=model, num_sims=num_sims, max_steps=max_steps)

@@ -1,0 +1,303 @@
+"""GreediRIS: the distributed streaming round, SPMD over a JAX mesh.
+
+This is the paper's §3.4 workflow mapped onto TPU-native collectives
+(see DESIGN.md §2 for the adaptation table):
+
+  S1 sampling       — shard_map over the machine axes; each shard draws
+                      theta/m RRR sets with a fold_in(key, shard) stream
+                      (leapfrog analogue: partition-independent RNG).
+  S2 all-to-all     — `lax.all_to_all` of the packed incidence bitmatrix
+                      (split vertices, concat sample-words) after a
+                      globally-agreed random vertex permutation (the
+                      RandGreedi uniform partition).
+  S3 senders        — vectorized greedy max-k-cover per shard; the first
+                      ceil(alpha*k) seed rows form the truncated payload.
+  S4 receiver       — replicated streaming aggregation.  Two schedules:
+                      * "gather":   one all_gather of all payloads, then
+                        a streaming pass (2 collective steps total —
+                        the paper's headline communication reduction);
+                      * "pipeline": an m-step ppermute ring where bucket
+                        insertion of chunk r overlaps the permute of
+                        chunk r+1 (the SPMD analogue of the paper's
+                        nonblocking streaming; also *order-diverse*:
+                        each device sees a rotated stream order, and we
+                        keep the best bucket solution across devices —
+                        a beyond-paper quality bonus at zero extra
+                        communication).
+
+Also provides the Ripples-style baseline (`ripples_select_sharded`):
+k global psum reductions of an n-sized gain vector — implemented so the
+dry-run can *measure* the collective volume GreediRIS eliminates.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import bitset, maxcover, streaming
+
+
+class GreediRISOut(NamedTuple):
+    seeds: jnp.ndarray          # int32 [k] global vertex ids (-1 pad)
+    coverage: jnp.ndarray       # int32 [] coverage of returned seeds
+    global_coverage: jnp.ndarray   # best streaming-receiver coverage
+    best_local_coverage: jnp.ndarray
+
+
+def _axis_size(mesh, axes: Sequence[str]) -> int:
+    return int(math.prod(mesh.shape[a] for a in axes))
+
+
+def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
+                max_degree: int, model: str = "IC", delta: float = 0.077,
+                alpha_trunc: float = 1.0, aggregate: str = "gather",
+                max_steps: int = 32, sample_chunks: int = 1,
+                use_kernel: bool = False, shuffle: str = "dense",
+                est_rrr_len: float = 16.0):
+    """Build the jittable distributed round fn(nbr, prob, wt, key).
+
+    The graph (padded reverse adjacency [n_pad, d]) is replicated on
+    every device — the paper's setup ("the input graph is loaded on all
+    machines").  Returns a function suitable for jax.jit with the given
+    mesh, and the padded vertex count.
+
+    shuffle:
+      "dense"  — all_to_all of the packed incidence bitmatrix (paper-
+                 faithful fixed-shape adaptation; O(n * theta / 32)
+                 bytes regardless of RRR sparsity).
+      "sparse" — communication-optimized: exchange (vertex, sample)
+                 COO pairs in fixed-capacity per-destination buckets
+                 and rebuild the packed rows locally.  Bytes scale
+                 with the actual RRR mass (theta * avg_len * 8), a
+                 ~2-orders-of-magnitude reduction at production scale
+                 (EXPERIMENTS.md §Perf).  ``est_rrr_len`` sizes the
+                 buckets (x2 safety); overflow pairs are dropped and
+                 counted (quality effect = slightly smaller theta).
+    """
+    axes = tuple(axes)
+    m = _axis_size(mesh, axes)
+    n_pad = ((n + m - 1) // m) * m
+    per = n_pad // m
+    theta_local = ((theta // m + 31) // 32) * 32
+    assert theta_local % sample_chunks == 0 or sample_chunks == 1
+    w_local = theta_local // 32
+    w_global = (theta_local * m) // 32
+    kk = max(1, int(round(alpha_trunc * k)))
+    # sparse-shuffle bucket capacity: pairs per (src, dst) pair
+    cap = max(64, int(2.0 * theta_local * est_rrr_len / m))
+
+    from repro.core.rrr import rrr_batch
+
+    def shard_fn(nbr, prob, wt, key):
+        pid = lax.axis_index(axes)
+        key_p = jax.random.fold_in(key, pid)
+        perm = jax.random.permutation(
+            jax.random.fold_in(key, 0x9E37), n_pad)
+        inv_perm = jnp.argsort(perm)   # position of vertex v in perm
+
+        if shuffle == "dense":
+            # --- S1: sample theta/m RRR sets, packed bitmatrix ---
+            def one_chunk(i, acc):
+                kc = jax.random.fold_in(key_p, i)
+                kr, kb = jax.random.split(kc)
+                b = theta_local // sample_chunks
+                roots = jax.random.randint(kr, (b,), 0, n)
+                vis = rrr_batch(nbr, prob, wt, roots, kb, model=model,
+                                max_steps=max_steps)      # [b, n]
+                packed = bitset.pack_bool_matrix(vis.T)    # [n, b/32]
+                return lax.dynamic_update_slice(
+                    acc, packed, (0, i * (b // 32)))
+
+            x_p = jnp.zeros((nbr.shape[0], w_local),
+                            dtype=bitset.WORD_DTYPE)
+            x_p = lax.fori_loop(0, sample_chunks, one_chunk, x_p)
+            if nbr.shape[0] < n_pad:
+                x_p = jnp.pad(x_p, ((0, n_pad - nbr.shape[0]), (0, 0)))
+            # --- S2: uniform random partition + dense all-to-all ---
+            x_s = lax.all_to_all(x_p[perm], axes, split_axis=0,
+                                 concat_axis=1, tiled=True)
+        else:
+            # --- S1+S2 sparse: COO pair exchange ---
+            send = jnp.zeros((m, cap, 2), dtype=jnp.int32)
+            counts = jnp.zeros((m,), dtype=jnp.int32)
+
+            def one_chunk(i, state):
+                send, counts = state
+                kc = jax.random.fold_in(key_p, i)
+                kr, kb = jax.random.split(kc)
+                b = theta_local // sample_chunks
+                roots = jax.random.randint(kr, (b,), 0, n)
+                vis = rrr_batch(nbr, prob, wt, roots, kb, model=model,
+                                max_steps=max_steps)      # [b, n]
+                size = cap * m // sample_chunks
+                s_idx, v_idx = jnp.nonzero(vis, size=size,
+                                           fill_value=-1)
+                valid = s_idx >= 0
+                sample_gid = pid * theta_local + i * b + s_idx
+                pos = inv_perm[jnp.clip(v_idx, 0)]
+                dst = jnp.where(valid, pos // per, m)    # m = discard
+                onehot = jax.nn.one_hot(dst, m, dtype=jnp.int32)
+                rank = jnp.take_along_axis(
+                    jnp.cumsum(onehot, axis=0),
+                    jnp.clip(dst, 0, m - 1)[:, None], axis=1)[:, 0] - 1
+                slot = counts[jnp.clip(dst, 0, m - 1)] + rank
+                ok = valid & (slot < cap)
+                d_c = jnp.where(ok, dst, m)              # OOB -> drop
+                s_c = jnp.where(ok, slot, 0)
+                send = send.at[d_c, s_c, 0].set(pos % per, mode="drop")
+                send = send.at[d_c, s_c, 1].set(sample_gid, mode="drop")
+                counts = counts + jnp.sum(
+                    onehot * ok[:, None].astype(jnp.int32), axis=0)
+                return send, counts
+
+            # mark empty slots with sample id -1
+            send = send.at[:, :, 1].set(-1)
+            send, counts = lax.fori_loop(0, sample_chunks, one_chunk,
+                                         (send, counts))
+            recv = lax.all_to_all(send, axes, split_axis=0,
+                                  concat_axis=0, tiled=True)
+            # rebuild packed rows [per, W_global]; each (v, s) pair is
+            # a unique bit, so scatter-add == scatter-or.
+            flat = recv.reshape(-1, 2)
+            v_l, s_g = flat[:, 0], flat[:, 1]
+            ok = s_g >= 0
+            word = jnp.where(ok, s_g // 32, 0)
+            bit = (jnp.where(ok, s_g, 0) % 32).astype(jnp.uint32)
+            contrib = jnp.where(ok, jnp.uint32(1) << bit, jnp.uint32(0))
+            x_s = jnp.zeros((per, w_global), dtype=bitset.WORD_DTYPE)
+            x_s = x_s.at[jnp.where(ok, v_l, 0), word].add(
+                contrib, mode="drop")
+
+        # --- S3: local greedy (sender) ---
+        sol = maxcover.greedy_maxcover(x_s, k, use_kernel)
+        local_ids = jnp.where(
+            sol.seeds >= 0, perm[pid * per + jnp.clip(sol.seeds, 0)], -1)
+        sent_ids = local_ids[:kk]
+        sent_rows = sol.rows[:kk]
+
+        # l for the bucket thresholds: global max singleton gain.
+        lower = lax.pmax(sol.gains[0].astype(jnp.float32), axes)
+
+        # --- S4: streaming receiver (replicated) ---
+        state = streaming.init_state(k, delta, lower, sol.rows.shape[1])
+        if aggregate == "gather":
+            ids_all = lax.all_gather(sent_ids, axes, tiled=True)   # [m*kk]
+            rows_all = lax.all_gather(sent_rows, axes, tiled=True)
+            state = streaming.insert_chunk(state, ids_all, rows_all, k,
+                                           use_kernel)
+        else:  # pipeline: m-step ring; permute of the next chunk
+            # overlaps insertion of the current one.
+            pairs = [(j, (j + 1) % m) for j in range(m)]
+
+            def ring(carry, _):
+                st, b_ids, b_rows = carry
+                nxt_ids = lax.ppermute(b_ids, axes, pairs)
+                nxt_rows = lax.ppermute(b_rows, axes, pairs)
+                st = streaming.insert_chunk(st, b_ids, b_rows, k,
+                                            use_kernel)
+                return (st, nxt_ids, nxt_rows), None
+
+            (state, _, _), _ = lax.scan(
+                ring, (state, sent_ids, sent_rows), None, length=m)
+        g_seeds, g_cov = streaming.finalize(state)
+
+        # best receiver across devices (identical under "gather";
+        # order-diverse under "pipeline" -> keep the best).
+        g_cov_all = lax.all_gather(g_cov, axes, tiled=False)       # [m]
+        g_seeds_all = lax.all_gather(g_seeds, axes, tiled=False)   # [m, k]
+        g_best = jnp.argmax(g_cov_all)
+        g_cov_best = g_cov_all[g_best]
+        g_seeds_best = g_seeds_all[g_best]
+
+        # best local solution (paper Alg. 4 lines 5-6)
+        lc_all = lax.all_gather(sol.coverage, axes, tiled=False)   # [m]
+        lids_all = lax.all_gather(local_ids, axes, tiled=False)    # [m, k]
+        l_best = jnp.argmax(lc_all)
+        take_global = g_cov_best >= lc_all[l_best]
+        seeds = jnp.where(take_global, g_seeds_best, lids_all[l_best])
+        cov = jnp.maximum(g_cov_best, lc_all[l_best])
+        return GreediRISOut(seeds, cov, g_cov_best, lc_all[l_best])
+
+    specs_in = (P(), P(), P(), P())  # graph + key replicated
+    specs_out = GreediRISOut(P(), P(), P(), P())
+    fn = jax.shard_map(shard_fn, mesh=mesh, in_specs=specs_in,
+                       out_specs=specs_out, check_vma=False)
+    return fn, n_pad, theta_local * m
+
+
+def build_ripples_round(mesh, axes: Sequence[str], *, n: int, theta: int,
+                        k: int, model: str = "IC", max_steps: int = 32,
+                        sample_chunks: int = 1, use_kernel: bool = False,
+                        unroll_k: bool = False):
+    """Baseline: distributed greedy with k global reductions (Ripples
+    [12] / DiIMM [14] equivalent — see paper §2.1).  Samples stay
+    sharded; every greedy pick all-reduces an n-sized gain vector.
+
+    unroll_k=True unrolls the k-iteration loop so the dry-run's HLO
+    parse sees all k all-reduces (cost_analysis does not multiply
+    while-loop bodies)."""
+    axes = tuple(axes)
+    m = _axis_size(mesh, axes)
+    theta_local = ((theta // m + 31) // 32) * 32
+    w_local = theta_local // 32
+
+    from repro.core.rrr import rrr_batch
+
+    def shard_fn(nbr, prob, wt, key):
+        pid = lax.axis_index(axes)
+        key_p = jax.random.fold_in(key, pid)
+
+        def one_chunk(i, acc):
+            kc = jax.random.fold_in(key_p, i)
+            kr, kb = jax.random.split(kc)
+            b = theta_local // sample_chunks
+            roots = jax.random.randint(kr, (b,), 0, n)
+            vis = rrr_batch(nbr, prob, wt, roots, kb, model=model,
+                            max_steps=max_steps)
+            return lax.dynamic_update_slice(
+                acc, bitset.pack_bool_matrix(vis.T), (0, i * (b // 32)))
+
+        x_p = jnp.zeros((n, w_local), dtype=bitset.WORD_DTYPE)
+        x_p = lax.fori_loop(0, sample_chunks, one_chunk, x_p)
+
+        def body(i, state):
+            covered, seeds, picked = state
+            if use_kernel:
+                from repro.kernels import ops as kops
+                gains = kops.marginal_gain(x_p, covered)
+            else:
+                gains = bitset.marginal_gain(x_p, covered)
+            total = lax.psum(gains, axes)   # the k-th O(n) all-reduce
+            total = jnp.where(picked, -1, total)
+            best = jnp.argmax(total)
+            take = total[best] > 0
+            covered = covered | jnp.where(take, x_p[best],
+                                          jnp.zeros_like(covered))
+            seeds = seeds.at[i].set(
+                jnp.where(take, best.astype(jnp.int32), -1))
+            picked = picked.at[best].set(take | picked[best])
+            return covered, seeds, picked
+
+        covered = jnp.zeros((w_local,), dtype=bitset.WORD_DTYPE)
+        seeds = jnp.full((k,), -1, dtype=jnp.int32)
+        picked = jnp.zeros((n,), dtype=bool)
+        if unroll_k:
+            state = (covered, seeds, picked)
+            for i in range(k):
+                state = body(i, state)
+            covered, seeds, picked = state
+        else:
+            covered, seeds, picked = lax.fori_loop(
+                0, k, body, (covered, seeds, picked))
+        cov = lax.psum(bitset.coverage_size(covered), axes)
+        return seeds, cov
+
+    fn = jax.shard_map(shard_fn, mesh=mesh, in_specs=(P(), P(), P(), P()),
+                       out_specs=(P(), P()), check_vma=False)
+    return fn, theta_local * m

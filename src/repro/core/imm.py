@@ -1,0 +1,119 @@
+"""IMM martingale-round driver (paper Algorithm 1, Tang et al. [8]).
+
+Host-driven outer loop (the number of rounds is data dependent) calling
+jitted sampling + seed-selection inner steps.  The seed selector is
+pluggable — greedy (sequential Ripples-equivalent), RandGreedi, or the
+full streaming GreediRIS — per Corollary 2.1 any alpha-approximate
+max-k-cover preserves an (alpha - eps) overall guarantee.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitset, maxcover, randgreedi, theory
+from repro.core.rrr import sample_incidence
+from repro.graphs.csr import CSRGraph, padded_adjacency
+
+# selector(rows [n, W], k, key) -> (seeds [k] int32, coverage int32)
+Selector = Callable[[jnp.ndarray, int, jax.Array], tuple]
+
+
+class IMMResult(NamedTuple):
+    seeds: np.ndarray
+    coverage_fraction: float
+    theta: int
+    rounds: int
+    lb: float
+
+
+def greedy_selector(rows, k, key):
+    sol = maxcover.greedy_maxcover(rows, k)
+    return sol.seeds, sol.coverage
+
+
+def make_randgreedi_selector(m: int, aggregator: str = "streaming",
+                             delta: float = 0.077,
+                             alpha_trunc: float = 1.0) -> Selector:
+    def sel(rows, k, key):
+        n = rows.shape[0]
+        pad = (-n) % m
+        if pad:
+            rows = jnp.pad(rows, ((0, pad), (0, 0)))
+        res = randgreedi.randgreedi_maxcover(
+            rows, key, m=m, k=k, aggregator=aggregator, delta=delta,
+            alpha_trunc=alpha_trunc)
+        seeds = jnp.where(res.seeds < n, res.seeds, -1)
+        return seeds, res.coverage
+    return sel
+
+
+def make_ripples_selector(m: int) -> Selector:
+    def sel(rows, k, key):
+        return randgreedi.ripples_select(rows, m=m, k=k)
+    return sel
+
+
+def _round32(x: float) -> int:
+    return int(math.ceil(x / 32.0) * 32)
+
+
+def imm(g: CSRGraph, k: int, eps: float, key, *, model: str = "IC",
+        ell: float = 1.0, selector: Optional[Selector] = None,
+        max_theta: int = 1 << 16, max_steps: int = 32,
+        theta0: Optional[int] = None) -> IMMResult:
+    """Run IMM and return the final seed set.
+
+    max_theta caps the sampling effort so huge lambda* values (tiny
+    eps, small graphs) stay tractable in tests/benchmarks; the cap is
+    reported so callers see when it binds.
+    """
+    selector = selector or greedy_selector
+    n = g.num_vertices
+    nbr, prob, wt = padded_adjacency(g)
+    ell = theory.adjust_ell(n, k, ell)
+    lp = theory.lambda_prime(n, k, eps, ell)
+    eps_p = math.sqrt(2.0) * eps
+
+    rows = None
+    theta_cur = 0
+    lb = 1.0
+    rounds = 0
+    k_sel = jax.random.fold_in(key, 0xC0FFEE)
+
+    max_rounds = max(1, int(math.log2(max(n, 2))))
+    for i in range(1, max_rounds + 1):
+        rounds = i
+        x = n / (2.0 ** i)
+        theta_i = min(_round32(lp / x), max_theta)
+        if theta0 is not None and i == 1:
+            theta_i = max(theta_i, _round32(theta0))
+        add = theta_i - theta_cur
+        if add > 0:
+            inc = sample_incidence(
+                nbr, prob, wt, jax.random.fold_in(key, i), theta=add, n=n,
+                model=model, max_steps=max_steps)
+            rows = inc if rows is None else jnp.concatenate([rows, inc], 1)
+            theta_cur = theta_i
+        seeds, cov = selector(rows, k, jax.random.fold_in(k_sel, i))
+        frac = float(cov) / float(theta_cur)
+        # CheckGoodness: does the estimated spread certify the lower
+        # bound for this round's guess x?
+        if n * frac >= (1.0 + eps_p) * x or theta_cur >= max_theta:
+            lb = max(n * frac / (1.0 + eps_p), 1.0)
+            break
+
+    theta = min(_round32(theory.lambda_star(n, k, eps, ell) / lb), max_theta)
+    if theta > theta_cur:
+        inc = sample_incidence(
+            nbr, prob, wt, jax.random.fold_in(key, 0x5EED), n=n,
+            theta=theta - theta_cur, model=model, max_steps=max_steps)
+        rows = jnp.concatenate([rows, inc], axis=1)
+        theta_cur = theta
+    seeds, cov = selector(rows, k, jax.random.fold_in(k_sel, 0x5EED))
+    return IMMResult(np.asarray(seeds), float(cov) / theta_cur, theta_cur,
+                     rounds, lb)

@@ -1,0 +1,113 @@
+"""Max-k-cover solvers over packed incidence rows.
+
+``greedy_maxcover`` is the jit-compatible vectorized greedy used on
+"local machines" (shards) inside GreediRIS: each of the k iterations is
+one fused marginal-gain sweep (the Pallas coverage kernel) + argmax.
+On TPU this memory-bound full sweep beats heap-based lazy greedy — no
+pointer chasing, same words touched — which is our TPU adaptation of
+the paper's Algorithm 2 (lazy greedy is kept as a NumPy oracle for
+equivalence tests: both achieve identical coverage).
+"""
+from __future__ import annotations
+
+import functools
+import heapq
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitset
+
+
+class CoverSolution(NamedTuple):
+    seeds: jnp.ndarray      # int32 [k] selected row indices (-1 = unused)
+    rows: jnp.ndarray       # uint32 [k, W] covering rows of the seeds
+    covered: jnp.ndarray    # uint32 [W] union of selected rows
+    coverage: jnp.ndarray   # int32 [] total bits covered
+    gains: jnp.ndarray      # int32 [k] marginal gain at each pick
+
+
+def _gain_fn(use_kernel: bool):
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.marginal_gain
+    return bitset.marginal_gain
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_kernel"))
+def greedy_maxcover(rows: jnp.ndarray, k: int,
+                    use_kernel: bool = False) -> CoverSolution:
+    """Vectorized greedy max-k-cover.
+
+    rows: uint32 [n, W] packed covering sets. Returns the greedy
+    (1 - 1/e)-approximate solution.
+    """
+    n, w = rows.shape
+    gain = _gain_fn(use_kernel)
+
+    def body(i, state):
+        covered, seeds, sel_rows, picked_mask, gains = state
+        g = gain(rows, covered)
+        g = jnp.where(picked_mask, -1, g)
+        best = jnp.argmax(g)
+        best_gain = g[best]
+        take = best_gain > 0
+        row = jnp.where(take, rows[best], jnp.zeros((w,), bitset.WORD_DTYPE))
+        covered = covered | row
+        seeds = seeds.at[i].set(jnp.where(take, best.astype(jnp.int32), -1))
+        sel_rows = sel_rows.at[i].set(row)
+        picked_mask = picked_mask.at[best].set(take | picked_mask[best])
+        gains = gains.at[i].set(jnp.where(take, best_gain, 0))
+        return covered, seeds, sel_rows, picked_mask, gains
+
+    covered = jnp.zeros((w,), dtype=bitset.WORD_DTYPE)
+    seeds = jnp.full((k,), -1, dtype=jnp.int32)
+    sel_rows = jnp.zeros((k, w), dtype=bitset.WORD_DTYPE)
+    picked = jnp.zeros((n,), dtype=bool)
+    gains = jnp.zeros((k,), dtype=jnp.int32)
+    covered, seeds, sel_rows, picked, gains = jax.lax.fori_loop(
+        0, k, body, (covered, seeds, sel_rows, picked, gains))
+    return CoverSolution(seeds, sel_rows, covered,
+                         bitset.coverage_size(covered), gains)
+
+
+def lazy_greedy_maxcover_np(rows: np.ndarray, k: int) -> tuple[list, int]:
+    """Paper Algorithm 2 — heap-based lazy greedy (NumPy oracle).
+
+    Returns (seed list, total coverage).  Used in tests to certify the
+    vectorized greedy matches the sequential lazy greedy coverage.
+    """
+    n, w = rows.shape
+    pop = np.vectorize(lambda x: bin(x).count("1"))
+
+    def count(words):
+        return int(np.sum([bin(int(x)).count("1") for x in words]))
+
+    covered = np.zeros(w, dtype=np.uint64)
+    heap = [(-count(rows[v]), 0, v) for v in range(n)]  # (-gain, stamp, v)
+    heapq.heapify(heap)
+    seeds: list[int] = []
+    stamp = 0
+    while heap and len(seeds) < k:
+        neg_gain, s, v = heapq.heappop(heap)
+        fresh = count(np.asarray(rows[v], dtype=np.uint64) & ~covered)
+        if -neg_gain == fresh or (heap and fresh >= -heap[0][0]):
+            if fresh == 0:
+                break
+            seeds.append(v)
+            covered |= np.asarray(rows[v], dtype=np.uint64)
+            stamp += 1
+        else:
+            heapq.heappush(heap, (-fresh, stamp, v))
+    return seeds, count(covered)
+
+
+def coverage_of(rows: np.ndarray, seeds) -> int:
+    """Coverage of an explicit seed subset (host-side check)."""
+    covered = np.zeros(rows.shape[1], dtype=np.uint64)
+    for s in seeds:
+        if s >= 0:
+            covered |= np.asarray(rows[int(s)], dtype=np.uint64)
+    return int(np.sum([bin(int(x)).count("1") for x in covered]))

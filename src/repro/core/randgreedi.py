@@ -1,0 +1,130 @@
+"""RandGreedi for max-k-cover (paper Algorithm 4), single-controller.
+
+This module is the *algorithmic* RandGreedi: partition the covering
+sets uniformly at random over m machines, run greedy locally, aggregate
+the union of local solutions on a global machine (offline greedy or the
+streaming algorithm), return the better of {global, best local}.
+
+The mesh-parallel SPMD execution of the same algorithm lives in
+``repro.core.greediris`` (shard_map + collectives); this version runs
+the identical math on one device with an explicit machine axis and is
+used by tests (m-independence, approximation bounds) and CPU
+benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitset, maxcover, streaming
+
+
+class RandGreediResult(NamedTuple):
+    seeds: jnp.ndarray        # int32 [k] global vertex ids (-1 pad)
+    coverage: jnp.ndarray     # int32 []
+    global_coverage: jnp.ndarray
+    best_local_coverage: jnp.ndarray
+    local_seeds: jnp.ndarray  # int32 [m, k] global ids of local picks
+
+
+def partition_permutation(n: int, key) -> jnp.ndarray:
+    """Uniform random partition = random permutation chopped into m
+    blocks (the paper's uniform-at-random vertex partitioning)."""
+    return jax.random.permutation(key, n)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "m", "k", "aggregator", "delta", "alpha_trunc", "use_kernel"))
+def randgreedi_maxcover(rows: jnp.ndarray, key, *, m: int, k: int,
+                        aggregator: str = "streaming", delta: float = 0.077,
+                        alpha_trunc: float = 1.0,
+                        use_kernel: bool = False) -> RandGreediResult:
+    """RandGreedi max-k-cover over uint32 rows [n, W].
+
+    aggregator: "greedy" (offline lazy-greedy equivalent, Alg. 4 line 4)
+      or "streaming" (Alg. 5).  alpha_trunc < 1 enables GreediRIS-trunc:
+      only the first ceil(alpha*k) local seeds reach the aggregator.
+    """
+    n, w = rows.shape
+    perm = partition_permutation(n, key)
+    per = n // m  # vertices per machine (n padded by caller if needed)
+    assign = perm[:per * m].reshape(m, per)        # [m, per] global ids
+    local_rows = rows[assign]                      # [m, per, W]
+
+    # --- local greedy on each machine (vmapped = "in parallel") ---
+    local = jax.vmap(
+        lambda r: maxcover.greedy_maxcover(r, k, use_kernel))(local_rows)
+    local_ids = jnp.where(
+        local.seeds >= 0,
+        jnp.take_along_axis(assign, jnp.clip(local.seeds, 0), axis=1),
+        -1)                                         # [m, k] global ids
+    local_cov = bitset.coverage_size(local.covered)  # [m]
+
+    # --- truncation: keep only the first alpha*k seeds per machine ---
+    kk = max(1, int(round(alpha_trunc * k)))
+    sent_ids = local_ids[:, :kk].reshape(-1)             # [m*kk]
+    sent_rows = local.rows[:, :kk].reshape(-1, w)        # [m*kk, W]
+
+    # --- global aggregation ---
+    if aggregator == "greedy":
+        sol = maxcover.greedy_maxcover(sent_rows, k, use_kernel)
+        g_ids = jnp.where(sol.seeds >= 0, sent_ids[jnp.clip(sol.seeds, 0)],
+                          -1)
+        g_cov = sol.coverage
+        g_rows_cover = sol.covered
+    else:
+        # l = max singleton coverage among the stream (first local pick
+        # of each machine has each machine's max; take global max).
+        lower = jnp.max(local.gains[:, 0]).astype(jnp.float32)
+        g_ids_raw, g_cov, state = streaming.streaming_maxcover(
+            sent_ids, sent_rows, k, delta, lower, use_kernel=use_kernel)
+        g_ids = g_ids_raw
+        per_bucket = bitset.coverage_size(state.covers)
+        g_rows_cover = state.covers[jnp.argmax(per_bucket)]
+
+    # --- best of {global, best local} (Alg. 4 lines 5-6) ---
+    best_m = jnp.argmax(local_cov)
+    take_global = g_cov >= local_cov[best_m]
+    seeds = jnp.where(take_global, g_ids, local_ids[best_m])
+    coverage = jnp.maximum(g_cov, local_cov[best_m])
+    return RandGreediResult(seeds, coverage, g_cov, jnp.max(local_cov),
+                            local_ids)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "k", "use_kernel"))
+def ripples_select(rows: jnp.ndarray, *, m: int, k: int,
+                   use_kernel: bool = False):
+    """Baseline: Ripples-style seed selection = k global reductions.
+
+    Samples (words) are sharded across m machines; each greedy round
+    sums per-machine marginal gains (the all-reduce the paper
+    eliminates) then picks the argmax.  Single-controller simulation
+    with an explicit machine axis; the SPMD version (with real psums)
+    is ``greediris.ripples_select_sharded``.
+    """
+    n, w = rows.shape
+    wm = w // m
+    shards = rows[:, :wm * m].reshape(n, m, wm).transpose(1, 0, 2)  # [m,n,wm]
+
+    def body(i, state):
+        covered, seeds, picked = state  # covered [m, wm]
+        gains = jax.vmap(bitset.marginal_gain)(shards, covered)  # [m, n]
+        total = jnp.sum(gains, axis=0)          # the k-th global reduction
+        total = jnp.where(picked, -1, total)
+        best = jnp.argmax(total)
+        take = total[best] > 0
+        row = jnp.where(take, shards[:, best], jnp.zeros_like(covered))
+        covered = covered | row
+        seeds = seeds.at[i].set(jnp.where(take, best.astype(jnp.int32), -1))
+        picked = picked.at[best].set(take | picked[best])
+        return covered, seeds, picked
+
+    covered = jnp.zeros((m, wm), dtype=bitset.WORD_DTYPE)
+    seeds = jnp.full((k,), -1, dtype=jnp.int32)
+    picked = jnp.zeros((n,), dtype=bool)
+    covered, seeds, picked = jax.lax.fori_loop(
+        0, k, body, (covered, seeds, picked))
+    return seeds, jnp.sum(bitset.coverage_size(covered))

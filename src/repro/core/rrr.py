@@ -1,0 +1,152 @@
+"""Batched Random-Reverse-Reachable (RRR) set sampling.
+
+TPU adaptation of the paper's per-rank probabilistic BFS (§3.4 S1): the
+frontier/visited state of a *batch* of samples is a dense bool matrix
+``[batch, n]`` and one BFS expansion is a fused gather/coin-flip/scatter
+over the padded reverse adjacency — fixed shapes, no pointers, VPU
+friendly.  Each expansion re-draws edge coins; under IC an edge is
+examined exactly once (its source is in the frontier exactly once), so
+per-step redraws are distributionally identical to a live-edge graph.
+
+LT uses the live-edge equivalence of Kempe et al.: every vertex selects
+at most one incoming edge (with probability = its weight); the RRR set
+is the chain of selected in-neighbors — this is why LT traversals are
+shallower, matching the paper's observation (§4.2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import bitset
+from repro.graphs.csr import CSRGraph, padded_adjacency
+
+Model = Literal["IC", "LT"]
+
+
+@functools.partial(jax.jit, static_argnames=("model", "max_steps"))
+def rrr_batch(nbr, prob, wt, roots, key, *, model: str, max_steps: int = 64):
+    """Generate one batch of RRR sets.
+
+    Args:
+      nbr/prob/wt: padded reverse adjacency [n, d] (row v = in-nbrs of v).
+      roots: int32 [batch] source vertices (chosen uniformly by caller).
+      key: PRNG key.
+    Returns:
+      visited: bool [batch, n]; visited[i, v] <=> v in RRR(roots[i]).
+    """
+    n, d = nbr.shape
+    batch = roots.shape[0]
+    visited0 = jnp.zeros((batch, n), dtype=bool).at[
+        jnp.arange(batch), roots].set(True)
+
+    valid = nbr >= 0
+    tgt = jnp.where(valid, nbr, n).reshape(-1)  # padded slots -> dump row n
+
+    if model == "IC":
+        # degree-chunked expansion: coins are drawn [batch, n, CHUNK]
+        # at a time so peak memory is O(batch * n * CHUNK), not
+        # O(batch * n * d_max) — essential for skewed-degree graphs.
+        chunk = min(d, 32)
+        n_chunks = (d + chunk - 1) // chunk
+        d_pad = n_chunks * chunk
+        if d_pad != d:
+            prob_p = jnp.pad(prob, ((0, 0), (0, d_pad - d)))
+            tgt_p = jnp.pad(jnp.where(valid, nbr, n),
+                            ((0, 0), (0, d_pad - d)), constant_values=n)
+        else:
+            prob_p = prob
+            tgt_p = jnp.where(valid, nbr, n)
+
+        def body(state):
+            frontier, visited, k, step = state
+            k, sub = jax.random.split(k)
+
+            def slot_chunk(c, hit):
+                coins = jax.random.uniform(
+                    jax.random.fold_in(sub, c), (batch, n, chunk))
+                p_c = lax.dynamic_slice(prob_p, (0, c * chunk),
+                                        (n, chunk))
+                t_c = lax.dynamic_slice(tgt_p, (0, c * chunk),
+                                        (n, chunk))
+                # v in frontier examines incoming edge (u -> v): with
+                # prob p the reverse traversal reaches u.
+                fire = frontier[:, :, None] & (coins < p_c[None])
+                return hit.at[:, t_c.reshape(-1)].max(
+                    fire.reshape(batch, -1))
+
+            hit = jnp.zeros((batch, n + 1), dtype=bool)
+            hit = lax.fori_loop(0, n_chunks, slot_chunk, hit)[:, :n]
+            new = hit & ~visited
+            return new, visited | new, k, step + 1
+    else:  # LT live-edge: newly reached v follows exactly one in-edge,
+        # edge j selected with prob wt[v, j] (possibly none).
+        cumw = jnp.cumsum(wt, axis=1)  # [n, d]
+
+        def body(state):
+            frontier, visited, k, step = state
+            k, sub = jax.random.split(k)
+            r = jax.random.uniform(sub, (batch, n))
+            # chosen slot = first j with r < cumw[v, j]; d means "none".
+            chosen = jnp.sum(r[:, :, None] >= cumw[None], axis=-1)  # [b, n]
+            has_pick = chosen < jnp.sum(valid, axis=1)[None]
+            safe = jnp.clip(chosen, 0, d - 1)
+            # gather one in-neighbor per (sample, vertex) without
+            # materializing [b, n, d]
+            pick_nbr = nbr[jnp.arange(n)[None, :], safe]
+            go = frontier & has_pick & (pick_nbr >= 0)
+            idx = jnp.where(go, pick_nbr, n)
+            hit = jnp.zeros((batch, n + 1), dtype=bool).at[
+                jnp.arange(batch)[:, None], idx].max(go)[:, :n]
+            new = hit & ~visited
+            return new, visited | new, k, step + 1
+
+    def cond(state):
+        frontier, _, _, step = state
+        return jnp.any(frontier) & (step < max_steps)
+
+    _, visited, _, _ = jax.lax.while_loop(
+        cond, body, (visited0, visited0, key, 0))
+    return visited
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("theta", "model", "max_steps", "n"))
+def sample_incidence(nbr, prob, wt, key, *, theta: int, n: int,
+                     model: str, max_steps: int = 64):
+    """Sample ``theta`` RRR sets, return packed incidence X [n, W].
+
+    Bit i of X[v] is set iff v is in RRR sample i.  theta must be a
+    multiple of 32 (callers round up) so rows pack without straddling.
+    """
+    assert theta % bitset.WORD_BITS == 0
+    kr, kb = jax.random.split(key)
+    roots = jax.random.randint(kr, (theta,), 0, n)
+    visited = rrr_batch(nbr, prob, wt, roots, kb,
+                        model=model, max_steps=max_steps)  # [theta, n]
+    return bitset.pack_bool_matrix(visited.T)  # [n, W]
+
+
+def sample_incidence_host(g: CSRGraph, theta: int, key, model: Model = "IC",
+                          max_steps: int = 64, batch: int = 256):
+    """Host-side convenience: batch over theta to bound peak memory."""
+    theta = int(np.ceil(theta / bitset.WORD_BITS) * bitset.WORD_BITS)
+    nbr, prob, wt = padded_adjacency(g)
+    n = g.num_vertices
+    chunks = []
+    done = 0
+    i = 0
+    while done < theta:
+        b = min(batch, theta - done)
+        b = int(np.ceil(b / bitset.WORD_BITS) * bitset.WORD_BITS)
+        sub = jax.random.fold_in(key, i)
+        chunks.append(sample_incidence(nbr, prob, wt, sub, theta=b, n=n,
+                                       model=model, max_steps=max_steps))
+        done += b
+        i += 1
+    return jnp.concatenate(chunks, axis=1), done  # [n, W_total], theta

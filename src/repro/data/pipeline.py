@@ -1,0 +1,102 @@
+"""Deterministic synthetic token pipeline + GreediRIS coreset selection.
+
+The pipeline is keyed by (seed, step, shard): any worker can recompute
+any batch — restart-safe and topology-elastic (a resumed run with a
+different device count replays the identical global batch sequence).
+
+``CoresetSelector`` is the paper's technique applied at the data
+layer: treat each candidate document as a covering set over vocabulary
+buckets (hashed n-grams) and pick the k documents that maximize
+coverage with the distributed streaming max-k-cover — submodular data
+selection as a first-class pipeline stage (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitset, maxcover, streaming
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    # synthetic corpus statistics: zipfian unigram + markov repetition
+    zipf_a: float = 1.2
+    repeat_p: float = 0.3
+
+
+class TokenPipeline:
+    """Stateless batch generator: batch(step) is pure in (cfg, step)."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        probs = 1.0 / np.arange(1, cfg.vocab_size + 1) ** cfg.zipf_a
+        self._probs = jnp.asarray(probs / probs.sum(), dtype=jnp.float32)
+
+    def batch(self, step: int, extra_token: bool = True) -> jnp.ndarray:
+        c = self.cfg
+        key = jax.random.fold_in(jax.random.key(c.seed), step)
+        s = c.seq_len + (1 if extra_token else 0)
+        k1, k2, k3 = jax.random.split(key, 3)
+        base = jax.random.categorical(
+            k1, jnp.log(self._probs)[None, None, :],
+            shape=(c.global_batch, s))
+        # markov repetition: with prob repeat_p, copy the previous token
+        rep = jax.random.uniform(k2, (c.global_batch, s)) < c.repeat_p
+        shifted = jnp.pad(base[:, :-1], ((0, 0), (1, 0)))
+        return jnp.where(rep, shifted, base).astype(jnp.int32)
+
+    def __iter__(self) -> Iterator[jnp.ndarray]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+class CoresetSelector:
+    """Streaming max-k-cover document selection (GreediRIS at the data
+    layer).  Documents hash into `universe` n-gram buckets; coverage of
+    a training subset == diversity of its token patterns."""
+
+    def __init__(self, universe: int = 4096, ngram: int = 2,
+                 delta: float = 0.077):
+        assert universe % 32 == 0
+        self.universe = universe
+        self.ngram = ngram
+        self.delta = delta
+
+    def doc_signature(self, tokens: np.ndarray) -> np.ndarray:
+        """Hash the doc's n-grams into a packed coverage row [W]."""
+        t = np.asarray(tokens, dtype=np.uint64)
+        h = t[: len(t) - self.ngram + 1].copy()
+        for j in range(1, self.ngram):
+            h = h * np.uint64(1000003) + t[j: len(t) - self.ngram + 1 + j]
+        idx = (h % np.uint64(self.universe)).astype(np.int64)
+        return bitset.pack_indices(idx, self.universe)
+
+    def select(self, docs: np.ndarray, k: int,
+               use_streaming: bool = True):
+        """docs [N, S] int tokens -> (selected indices [<=k], coverage)."""
+        rows = jnp.asarray(
+            np.stack([self.doc_signature(d) for d in docs]))
+        if not use_streaming:
+            sol = maxcover.greedy_maxcover(rows, k)
+            return np.asarray(sol.seeds), int(sol.coverage)
+        # order by a cheap richness proxy (unique tokens) to help the
+        # one-pass streaming thresholds, then stream
+        order = np.argsort([-len(np.unique(d)) for d in docs])
+        lower = float(jnp.max(jnp.sum(
+            jax.lax.population_count(rows).astype(jnp.int32), axis=-1)))
+        seeds, cov, _ = streaming.streaming_maxcover(
+            jnp.asarray(order, dtype=jnp.int32), rows[order], k,
+            self.delta, jnp.float32(lower))
+        sel = np.asarray(seeds)
+        return sel[sel >= 0], int(cov)

@@ -1,0 +1,175 @@
+"""Analytic per-device HBM-traffic model (TPU-fusion roofline).
+
+The CPU backend's ``cost_analysis()['bytes accessed']`` counts every
+unfused elementwise op (XLA:CPU barely fuses), overstating TPU HBM
+traffic by 5-10x.  This module computes the fusion-idealized traffic
+the TPU roofline convention uses: weights + optimizer states + the
+inputs/outputs of every matmul (activations), with flash-attention
+semantics (scores never round-trip to HBM) and remat accounted.
+
+Both numbers are reported in EXPERIMENTS.md §Roofline (`memory_s`
+analytic, `memory_s_hlo` upper bound from the compiled module).
+"""
+from __future__ import annotations
+
+import math
+
+from repro.configs import param_count
+from repro.configs.shapes import ShapeCell
+from repro.models.common import ModelConfig
+from repro.models.moe import MOE_GROUP
+from repro.models.transformer import layer_specs
+
+BF16 = 2
+F32 = 4
+
+
+def _mixer_io_per_token(cfg: ModelConfig, mixer: str, cell: ShapeCell,
+                        tp: int) -> float:
+    """Activation bytes moved per token by one mixer layer (fwd),
+    per device: d_model-sized tensors are replicated across tp; head/
+    feature-sharded intermediates divide by tp."""
+    d = cfg.d_model
+    if mixer == "attn":
+        h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        full = 4 * d                                   # x reads, o out
+        shard = (h * hd + 2 * kvh * hd                 # q, k, v
+                 + h * hd                              # o in
+                 + 2 * h * hd + 2 * kvh * hd) / tp     # flash io
+        return (full + shard) * BF16
+    if mixer == "mla":
+        h = cfg.num_heads
+        nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+        full = 2 * d + 2 * (qr + kvr + rd)             # lora bottlenecks
+        shard = (h * (nd + rd) + h * nd + h * vd + h * vd
+                 + 2 * h * (nd + rd + vd)) / tp
+        return (full + shard) * BF16
+    if mixer == "rglru":
+        w = cfg.lru_width or d
+        full = 3 * d
+        shard = (3 * w + 2 * w) / tp
+        scan = 6 * w / tp   # a, gated, h fp32 through the scan
+        return (full + shard) * BF16 + scan * F32
+    if mixer == "ssd":
+        di = 2 * d
+        n = cfg.ssm_state_dim
+        h = di // cfg.ssm_head_dim
+        q = cfg.ssm_chunk
+        full = 2 * d
+        proj = (2 * di + 2 * n + h + di) / tp
+        conv = 2 * (di + 2 * n) / tp
+        intra = (q * 2 + 2 * n) / tp       # scores row + B/C rows
+        state = (di * n / max(q, 1)) / tp
+        return full * BF16 + proj * BF16 + (conv + intra + state) * F32
+    raise ValueError(mixer)
+
+
+def _ffn_io_per_token(cfg: ModelConfig, kind: str, tp: int) -> float:
+    d = cfg.d_model
+    if kind == "dense":
+        return (3 * d + (3 * cfg.d_ff + 2 * cfg.d_ff) / tp) * BF16
+    if kind == "moe":
+        e, k, f = cfg.num_experts, cfg.experts_per_token, cfg.moe_d_ff
+        grp = cfg.moe_group or MOE_GROUP
+        cap = max(k, int(grp * k / e * cfg.capacity_factor))
+        # dispatch/combine [g, tg, e/tp, c] round trips
+        dispatch = 2 * 2 * (e / tp) * cap / grp
+        # expert-parallel over tp: each device handles e/tp experts so
+        # sees k*cf/tp of each token's expert work on average
+        expert = k * cfg.capacity_factor * (3 * d + 5 * f) / tp
+        shared = cfg.num_shared_experts * \
+            (3 * d + 5 * f * cfg.num_shared_experts / tp)
+        return (dispatch + expert + shared + e) * BF16
+    return 0.0
+
+
+def _cache_bytes_per_token_layer(cfg: ModelConfig, mixer: str) -> float:
+    if mixer == "attn":
+        return 2 * cfg.num_kv_heads * cfg.head_dim * BF16
+    if mixer == "mla":
+        return (cfg.kv_lora_rank + cfg.qk_rope_dim) * BF16
+    return 0.0  # recurrent state is O(1), counted separately
+
+
+def _recurrent_state_bytes(cfg: ModelConfig, mixer: str, batch: int
+                           ) -> float:
+    if mixer == "rglru":
+        w = cfg.lru_width or cfg.d_model
+        return batch * w * F32
+    if mixer == "ssd":
+        di = 2 * cfg.d_model
+        h = di // cfg.ssm_head_dim
+        return batch * h * cfg.ssm_head_dim * cfg.ssm_state_dim * F32
+    return 0.0
+
+
+def hbm_traffic(cfg: ModelConfig, cell: ShapeCell, *, n_dev: int,
+                dp: int, tp: int, remat: bool = True) -> float:
+    """Per-device HBM bytes for one step of the cell's kind."""
+    n_params = param_count(cfg)
+    specs = list(layer_specs(cfg))
+    if cfg.is_encoder_decoder:
+        specs = [("attn", "dense", 0)] * (cfg.encoder_layers +
+                                          2 * cfg.num_layers)
+    b, s = cell.global_batch, cell.seq_len
+    v = cfg.vocab_size
+
+    if cell.kind == "train":
+        tok_dev = b * s / dp
+        # weights: fwd read + bwd read (+ remat re-read) of the TP shard
+        w_tp = n_params * BF16 / tp
+        weights = w_tp * (3.0 if remat else 2.0)
+        grads = 2.0 * w_tp                       # write + reduce read
+        opt = n_params * (4 + 4 + 4 + 4 + 2 + 2) / (dp * tp)  # m,v rw + p rw
+        act_mult = 3.0 if remat else 2.5         # fwd + bwd (+ recompute)
+        acts = sum(_mixer_io_per_token(cfg, m, cell, tp) +
+                   _ffn_io_per_token(cfg, k, tp) for m, k, _ in specs)
+        acts_total = acts * tok_dev * act_mult
+        logits = tok_dev * (v / tp) * (2 + 4) * 1.5   # fwd bf16 + bwd f32
+        embed = tok_dev * cfg.d_model * BF16 * 3
+        return weights + grads + opt + acts_total + logits + embed
+
+    if cell.kind == "prefill":
+        tok_dev = b * s / dp
+        w_tp = n_params * BF16 / tp
+        acts = sum(_mixer_io_per_token(cfg, m, cell, tp) +
+                   _ffn_io_per_token(cfg, k, tp) for m, k, _ in specs)
+        cache_w = sum(_cache_bytes_per_token_layer(cfg, m)
+                      for m, _, _ in specs) * tok_dev
+        logits = (b / dp) * (v / tp) * 2 * 2
+        return w_tp + acts * tok_dev + cache_w + logits
+
+    # decode: one token; weights read once; KV cache / state read once
+    bd = b / dp if b % dp == 0 else b
+    tok_dev = bd
+    w_tp = n_params * BF16 / tp
+    acts = sum(_mixer_io_per_token(cfg, m, cell, tp) +
+               _ffn_io_per_token(cfg, k, tp) for m, k, _ in specs)
+    cache = 0.0
+    for m, _, w in specs:
+        eff_len = min(w, s) if w else s
+        if getattr(cfg, "shard_cache_seq", False):
+            kvh_shard = tp          # cache sequence axis sharded over tp
+        elif m == "attn" and cfg.num_kv_heads % tp == 0:
+            kvh_shard = tp
+        else:
+            kvh_shard = 1
+        cache += _cache_bytes_per_token_layer(cfg, m) * eff_len * bd \
+            / kvh_shard
+        cache += 2 * _recurrent_state_bytes(cfg, m, bd) / \
+            (tp if m in ("rglru", "ssd") else 1)
+    logits = bd * (v / tp) * 2 * 2
+    return w_tp + acts * tok_dev + cache + logits
+
+
+def model_flops(cfg: ModelConfig, cell: ShapeCell) -> float:
+    """MODEL_FLOPS: 6*N*D train (N = active params), 2*N*B decode."""
+    from repro.configs import active_param_count
+    n_active = active_param_count(cfg)
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        return 6.0 * n_active * b * s
+    if cell.kind == "prefill":
+        return 2.0 * n_active * b * s
+    return 2.0 * n_active * b

@@ -1,0 +1,2 @@
+from repro.graphs.csr import CSRGraph, from_edge_list, padded_adjacency
+from repro.graphs import generators

@@ -1,0 +1,119 @@
+"""Compressed-sparse-row graph container (device-resident, fixed shape).
+
+The influence-maximization algorithms need the *reverse* graph (who can
+reach me), so the container stores CSR over incoming edges by default:
+``indptr[v] .. indptr[v+1]`` indexes the in-neighbors of ``v``.
+
+Probabilities follow the paper's setup: IC edge probabilities are drawn
+uniform in [0, 0.1] (or user supplied); LT weights are normalized so
+incoming weights sum to <= 1 per vertex.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CSRGraph:
+    """Reverse-CSR graph with per-edge probabilities.
+
+    Attributes:
+      indptr:  int32 [n + 1]    row pointers (rows = destination vertices)
+      indices: int32 [nnz]      in-neighbor (source) vertex of each edge
+      probs:   float32 [nnz]    IC activation probability of each edge
+      weights: float32 [nnz]    LT edge weight (incoming sums <= 1)
+    """
+    indptr: jnp.ndarray
+    indices: jnp.ndarray
+    probs: jnp.ndarray
+    weights: jnp.ndarray
+
+    @property
+    def num_vertices(self) -> int:
+        return int(self.indptr.shape[0]) - 1
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.indices.shape[0])
+
+    def max_in_degree(self) -> int:
+        deg = np.diff(np.asarray(self.indptr))
+        return int(deg.max()) if deg.size else 0
+
+
+def from_edge_list(src: np.ndarray, dst: np.ndarray, n: int,
+                   probs: Optional[np.ndarray] = None,
+                   seed: int = 0) -> CSRGraph:
+    """Build the reverse-CSR graph from a directed edge list src -> dst."""
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    order = np.argsort(dst, kind="stable")
+    src, dst = src[order], dst[order]
+    nnz = src.shape[0]
+    indptr = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(indptr, dst + 1, 1)
+    indptr = np.cumsum(indptr)
+    rng = np.random.default_rng(seed)
+    if probs is None:
+        # Paper §4.1: uniform random edge probabilities in [0, 0.1].
+        probs = rng.uniform(0.0, 0.1, size=nnz).astype(np.float32)
+    else:
+        probs = np.asarray(probs, dtype=np.float32)[order]
+    # LT weights: random, then normalized so each vertex's incoming sum <= 1.
+    raw = rng.uniform(0.1, 1.0, size=nnz).astype(np.float64)
+    in_deg = np.diff(indptr)
+    row_of_edge = np.repeat(np.arange(n), in_deg)
+    row_sum = np.zeros(n, dtype=np.float64)
+    np.add.at(row_sum, row_of_edge, raw)
+    denom = np.maximum(row_sum[row_of_edge], 1e-12)
+    weights = (raw / denom).astype(np.float32)
+    return CSRGraph(
+        indptr=jnp.asarray(indptr, dtype=jnp.int32),
+        indices=jnp.asarray(src, dtype=jnp.int32),
+        probs=jnp.asarray(probs),
+        weights=jnp.asarray(weights),
+    )
+
+
+def to_dense_prob(g: CSRGraph) -> np.ndarray:
+    """Dense [n, n] IC probability matrix P[v, u] = p(u -> v). Test helper."""
+    n = g.num_vertices
+    dense = np.zeros((n, n), dtype=np.float32)
+    indptr = np.asarray(g.indptr)
+    idx = np.asarray(g.indices)
+    p = np.asarray(g.probs)
+    for v in range(n):
+        for e in range(indptr[v], indptr[v + 1]):
+            dense[v, idx[e]] = p[e]
+    return dense
+
+
+def padded_adjacency(g: CSRGraph, pad_to: Optional[int] = None):
+    """Convert CSR to padded [n, d_max] neighbor/prob/weight arrays.
+
+    Fixed-shape form used by the batched BFS sampler: row v lists the
+    in-neighbors of v, padded with -1 (prob/weight 0).
+    """
+    n = g.num_vertices
+    indptr = np.asarray(g.indptr)
+    deg = np.diff(indptr)
+    d = int(pad_to if pad_to is not None else (deg.max() if n else 0))
+    nbr = np.full((n, d), -1, dtype=np.int32)
+    prob = np.zeros((n, d), dtype=np.float32)
+    wt = np.zeros((n, d), dtype=np.float32)
+    idx = np.asarray(g.indices)
+    p = np.asarray(g.probs)
+    w = np.asarray(g.weights)
+    for v in range(n):
+        s, e = indptr[v], indptr[v + 1]
+        m = min(e - s, d)
+        nbr[v, :m] = idx[s:s + m]
+        prob[v, :m] = p[s:s + m]
+        wt[v, :m] = w[s:s + m]
+    return jnp.asarray(nbr), jnp.asarray(prob), jnp.asarray(wt)

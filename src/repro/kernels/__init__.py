@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the GreediRIS compute hot spots.
+
+coverage.py  fused AND-NOT + popcount marginal-gain sweep
+bucket.py    streaming bucket-insertion gain pass (Algorithm 5)
+topk_gain.py fused gain + blockwise argmax (greedy inner loop)
+
+Each kernel ships with ref.py (pure-jnp oracle) and ops.py (backend-
+aware jit wrappers).  Validated under interpret=True on CPU; compiled
+by Mosaic on real TPU backends.
+"""

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: streaming bucket-insertion gain pass.
+
+For one streamed-in candidate row and the B bucket covers, compute the
+per-bucket marginal gain
+
+    gains[b] = sum_w popcount(row[w] & ~covers[b, w])
+
+in a single fused pass (paper Algorithm 5 line 6, all buckets at once —
+the TPU analogue of the paper's 63 bucketing threads).  B <= 64 fits
+one sublane tile; the word axis is tiled and accumulated.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_W = 1024
+
+
+def _kernel(row_ref, cov_ref, out_ref):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    row = row_ref[...]                 # [1, BW]
+    cov = cov_ref[...]                 # [B, BW]
+    fresh = row & ~cov
+    pc = jax.lax.population_count(fresh).astype(jnp.int32)
+    out_ref[...] += jnp.sum(pc, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def bucket_gains_pallas(row: jnp.ndarray, covers: jnp.ndarray,
+                        block_w: int = BLOCK_W,
+                        interpret: bool = False) -> jnp.ndarray:
+    """row: uint32 [W]; covers: uint32 [B, W] -> int32 [B] gains."""
+    b, w = covers.shape
+    bw = min(block_w, max(128, w))
+    pad_w = (-w) % bw
+    if pad_w:
+        row = jnp.pad(row, (0, pad_w))
+        covers = jnp.pad(covers, ((0, 0), (0, pad_w)))
+    wp = covers.shape[1]
+    out = pl.pallas_call(
+        _kernel,
+        grid=(wp // bw,),
+        in_specs=[
+            pl.BlockSpec((1, bw), lambda j: (0, j)),
+            pl.BlockSpec((b, bw), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((b, 1), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        interpret=interpret,
+    )(row[None, :], covers)
+    return out[:, 0]

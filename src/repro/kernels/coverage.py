@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: fused AND-NOT + popcount marginal-gain sweep.
+
+gain[v] = sum_w popcount(X[v, w] & ~covered[w])
+
+This is the inner loop of every greedy max-k-cover iteration — a
+memory-bound streaming reduction over the packed incidence bitmatrix.
+Tiling: grid (vertex tiles x word tiles); each step loads a
+(BLOCK_V, BLOCK_W) uint32 tile of X (BLOCK_V*BLOCK_W*4 bytes of VMEM)
+plus the matching (1, BLOCK_W) slice of the covered mask, computes the
+fused andnot+popcount on the VPU, and accumulates a per-vertex partial
+sum into the output tile resident across the word-tile axis.
+
+Default tile (128, 512): 128 row sublanes x 512 word lanes = 256 KiB
+per X tile — 3 tiles (X, covered broadcast, acc) stay well under the
+~16 MiB v5e VMEM budget while giving full 8x128 vector-register shapes
+for uint32 (min tile (8, 128)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_V = 128
+BLOCK_W = 512
+
+
+def _kernel(x_ref, cov_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]                       # [BV, BW] uint32
+    cov = cov_ref[...]                   # [1, BW] uint32
+    fresh = x & ~cov                     # AND-NOT (bits not yet covered)
+    pc = jax.lax.population_count(fresh).astype(jnp.int32)
+    out_ref[...] += jnp.sum(pc, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_v", "block_w",
+                                             "interpret"))
+def marginal_gain_pallas(rows: jnp.ndarray, covered: jnp.ndarray,
+                         block_v: int = BLOCK_V, block_w: int = BLOCK_W,
+                         interpret: bool = False) -> jnp.ndarray:
+    """rows: uint32 [n, W]; covered: uint32 [W] -> int32 [n] gains."""
+    n, w = rows.shape
+    bv = min(block_v, max(8, n))
+    bw = min(block_w, max(128, w))
+    pad_n = (-n) % bv
+    pad_w = (-w) % bw
+    if pad_n or pad_w:
+        rows = jnp.pad(rows, ((0, pad_n), (0, pad_w)))
+        covered = jnp.pad(covered, (0, pad_w))
+    np_, wp = rows.shape
+    grid = (np_ // bv, wp // bw)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bv, bw), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bw), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bv, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, 1), jnp.int32),
+        interpret=interpret,
+    )(rows, covered[None, :])
+    return out[:n, 0]

@@ -1,0 +1,34 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On the CPU container the kernels execute under ``interpret=True``
+(Python emulation of the kernel body — the validation mode prescribed
+for this offline environment); on a real TPU backend they compile to
+Mosaic.  The wrappers pick the mode from the active backend so library
+code can call them unconditionally.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bucket import bucket_gains_pallas
+from repro.kernels.coverage import marginal_gain_pallas
+from repro.kernels.topk_gain import best_gain_index_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def marginal_gain(rows: jnp.ndarray, covered: jnp.ndarray) -> jnp.ndarray:
+    return marginal_gain_pallas(rows, covered, interpret=_interpret())
+
+
+def bucket_gains(row: jnp.ndarray, covers: jnp.ndarray) -> jnp.ndarray:
+    return bucket_gains_pallas(row, covers, interpret=_interpret())
+
+
+def best_gain_index(rows: jnp.ndarray, covered: jnp.ndarray,
+                    picked: jnp.ndarray):
+    return best_gain_index_pallas(rows, covered, picked,
+                                  interpret=_interpret())

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for every Pallas kernel (the ref implementations
+that the shape/dtype sweep tests assert against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def marginal_gain_ref(rows: jnp.ndarray, covered: jnp.ndarray):
+    """gain[v] = sum_w popcount(rows[v, w] & ~covered[w])."""
+    fresh = rows & ~covered[None, :]
+    return jnp.sum(jax.lax.population_count(fresh).astype(jnp.int32),
+                   axis=-1)
+
+
+def bucket_gains_ref(row: jnp.ndarray, covers: jnp.ndarray):
+    """gains[b] = sum_w popcount(row[w] & ~covers[b, w])."""
+    fresh = row[None, :] & ~covers
+    return jnp.sum(jax.lax.population_count(fresh).astype(jnp.int32),
+                   axis=-1)
+
+
+def best_gain_index_ref(rows: jnp.ndarray, covered: jnp.ndarray,
+                        picked: jnp.ndarray):
+    gains = marginal_gain_ref(rows, covered)
+    gains = jnp.where(picked, -1, gains)
+    best = jnp.argmax(gains)
+    return gains[best], best.astype(jnp.int32)

@@ -1,0 +1,108 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimb driver: lower a cell with config variants, report the
+roofline-term deltas (EXPERIMENTS.md §Perf methodology).
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --cell deepseek-decode
+  PYTHONPATH=src python -m repro.launch.hillclimb --cell moe-train
+  PYTHONPATH=src python -m repro.launch.hillclimb --cell im-round
+"""
+import argparse
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES
+from repro.distributed import hlo_analysis as hlo
+from repro.distributed import memory_model
+from repro.launch import dryrun
+
+
+def _measure(arch, shape, variant_name, cfg, multi_pod=False,
+             probes=True):
+    compiled, mesh, meta = dryrun.lower_cell(arch, shape, multi_pod,
+                                             cfg_override=cfg)
+    mem = hlo.memory_summary(compiled)
+    rec = {"variant": variant_name, "arch": arch, "shape": shape,
+           "peak_gib": mem["peak_bytes"] / 2**30,
+           "args_gib": mem["argument_bytes"] / 2**30}
+    coll = hlo.parse_collectives(compiled.as_text())
+    rec["coll_top_mib"] = coll.total_link_bytes / 2**20
+    del compiled
+    if probes:
+        probe = dryrun.probe_costs_cfg(arch, shape, multi_pod, cfg)
+        cell = SHAPES[shape]
+        mem_bytes = memory_model.hbm_traffic(
+            cfg, cell, n_dev=256, dp=16, tp=16, remat=cfg.remat)
+        terms = hlo.roofline(probe["flops"], mem_bytes,
+                             probe["link_bytes"])
+        rec.update(compute_s=terms.compute_s, memory_s=terms.memory_s,
+                   collective_s=terms.collective_s,
+                   dominant=terms.dominant,
+                   useful=memory_model.model_flops(cfg, cell) /
+                   max(probe["flops"] * 256, 1.0))
+    print(json.dumps(rec), flush=True)
+    return rec
+
+
+def cell_deepseek_decode():
+    """deepseek-v3-671b x decode_32k: MLA cache replicated over tp.
+    H1: shard the cache sequence axis over 'model' -> ~16x cache
+    memory reduction at the cost of a distributed-softmax psum."""
+    arch, shape = "deepseek-v3-671b", "decode_32k"
+    base = get_config(arch)
+    _measure(arch, shape, "baseline", base)
+    _measure(arch, shape, "seq-sharded-cache",
+             dataclasses.replace(base, shard_cache_seq=True))
+
+
+def cell_moe_train():
+    """qwen3-moe x train_4k / prefill: dispatch-einsum overhead.
+    H2: halve the dispatch group (512 -> 256) -> capacity C halves ->
+    dispatch tensor+flops halve.  H3: capacity factor 1.25 -> 1.0."""
+    arch, shape = "qwen3-moe-235b-a22b", "prefill_32k"
+    base = get_config(arch)
+    _measure(arch, shape, "baseline", base)
+    _measure(arch, shape, "group256",
+             dataclasses.replace(base, moe_group=256))
+    _measure(arch, shape, "group256+cf1.0",
+             dataclasses.replace(base, moe_group=256,
+                                 capacity_factor=1.0))
+
+
+def cell_im_round():
+    """GreediRIS round @256: the paper's own technique.
+    Baseline ripples (k psums) vs dense-shuffle GreediRIS vs the
+    communication-optimized sparse shuffle vs truncation levels."""
+    n, theta, k = 4_800_000, 1 << 20, 100
+    for kwargs, name in (
+        (dict(baseline=True), "ripples-k-reductions"),
+        (dict(alpha=1.0), "greediris-dense-a1.0"),
+        (dict(alpha=0.125), "greediris-dense-a0.125"),
+        (dict(alpha=0.125, shuffle="sparse"), "greediris-sparse-a0.125"),
+        (dict(alpha=0.125, shuffle="sparse", aggregate="pipeline"),
+         "greediris-sparse-pipeline-a0.125"),
+    ):
+        rec = dryrun.run_im_cell(False, n=n, theta=theta, k=k, **kwargs)
+        rec["variant"] = name
+        print(json.dumps({k2: v for k2, v in rec.items()
+                          if k2 in ("variant", "compile_s", "cost",
+                                    "collectives_top_level")}),
+              flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True,
+                    choices=("deepseek-decode", "moe-train", "im-round"))
+    args = ap.parse_args()
+    {"deepseek-decode": cell_deepseek_decode,
+     "moe-train": cell_moe_train,
+     "im-round": cell_im_round}[args.cell]()
+
+
+if __name__ == "__main__":
+    main()

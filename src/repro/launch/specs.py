@@ -1,0 +1,88 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+``input_specs`` returns (args, in_pspecs) for the step function of the
+cell's kind — weak-type-correct, shardable, no device allocation.
+Modality frontends are stubs: audio provides frame embeddings, VLM
+provides patch embeddings, both [B, *, d_model] bf16.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.shapes import ShapeCell
+from repro.models import transformer as tfm
+from repro.models.common import ModelConfig
+from repro.optim import adamw
+from repro.train import steps as steps_lib
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _dp(rules, batch: int, dp_size: int):
+    """Batch sharding axis — replicate when indivisible (long_500k B=1)."""
+    return rules["dp"] if batch % dp_size == 0 else None
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell, rules, dp_size: int):
+    """(batch SDS tree, batch pspec tree) for train/prefill inputs."""
+    b, s = cell.global_batch, cell.seq_len
+    dp = _dp(rules, b, dp_size)
+    extra = 1 if cell.kind == "train" else 0
+    batch = {"tokens": SDS((b, s + extra), jnp.int32)}
+    specs = {"tokens": P(dp, None)}
+    if cfg.is_encoder_decoder:
+        # audio stub: precomputed frame embeddings for the encoder; the
+        # decoder consumes `tokens`.
+        enc_len = s if cell.kind != "decode" else min(s, 4096)
+        batch["frames"] = SDS((b, enc_len, cfg.d_model), jnp.bfloat16)
+        specs["frames"] = P(dp, None, None)
+    if cfg.family == "vlm":
+        batch["patches"] = SDS((b, cfg.num_patches, cfg.d_model),
+                               jnp.bfloat16)
+        specs["patches"] = P(dp, None, None)
+    return batch, specs
+
+
+def state_shapes(cfg: ModelConfig, opt_cfg: adamw.OptConfig):
+    """(TrainState shapes, logical specs tree) without allocating."""
+    captured = {}
+
+    def init(key):
+        state, specs = steps_lib.init_train_state(key, cfg, opt_cfg)
+        captured["specs"] = specs
+        return state
+
+    shapes = jax.eval_shape(init, jax.random.key(0))
+    return shapes, captured["specs"]
+
+
+def cache_shapes(bundle, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: bundle.init_caches(batch, max_len))
+
+
+def decode_args(cfg: ModelConfig, bundle, cell: ShapeCell, rules,
+                dp_size: int):
+    """(args SDS, arg pspecs) for decode_step(params, carry, tok, pos)."""
+    b, s = cell.global_batch, cell.seq_len
+    dp = _dp(rules, b, dp_size)
+    caches = cache_shapes(bundle, b, s)
+    cache_specs = bundle.cache_pspecs()
+    if dp is None:
+        cache_specs = jax.tree.map(
+            lambda p: P(*(None if ax == rules["dp"] else ax for ax in p)),
+            cache_specs, is_leaf=lambda x: isinstance(x, P))
+    if cfg.is_encoder_decoder:
+        enc_len = min(s, 4096)
+        carry = (caches, SDS((b, enc_len, cfg.d_model), jnp.bfloat16))
+        carry_specs = (cache_specs, P(dp, None, None))
+    else:
+        carry, carry_specs = caches, cache_specs
+    tok = SDS((b, 1), jnp.int32)
+    pos = SDS((), jnp.int32)
+    return (carry, tok, pos), (carry_specs, P(dp, None), P())

@@ -1,0 +1,313 @@
+"""Attention blocks: GQA/MQA/MHA, MLA (DeepSeek), local windows, caches.
+
+Long contexts (32k prefill) never materialize the full [S, S] score
+matrix: ``chunked_attention`` is a flash-style two-level scan with
+running-max/denominator accumulation in fp32 — the standard
+memory-efficient TPU formulation (compute stays on the MXU via the
+blockwise einsums, HBM traffic is O(S * d) per query block).
+
+Caches are position-explicit ring buffers: slot i stores absolute
+position ``pos[i]`` (1<<30 = empty, masked out by the causal test), so
+windowed architectures (RecurrentGemma local attention) decode against
+a fixed ``window``-sized buffer regardless of context length.
+
+MLA decode uses the *absorbed* formulation: q_nope is folded through
+the k up-projection so the per-step attention runs directly against
+the compressed c_kv cache — the cache stays [S, kv_lora + rope] per
+token instead of [S, 2 * H * head_dim].
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import (ModelConfig, apply_rope, constrain,
+                                 make_rope, rms_norm, truncated_normal)
+
+EMPTY_POS = 1 << 30
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray    # [B, T, KVH, hd]   (MLA: c_kv [B, T, kv_lora])
+    v: jnp.ndarray    # [B, T, KVH, hd]   (MLA: k_rope [B, T, rope])
+    pos: jnp.ndarray  # int32 [T] absolute position per slot (EMPTY_POS=free)
+    length: jnp.ndarray  # int32 [] total tokens ever written
+
+
+def _cache_write(cache: KVCache, k_new, v_new, positions):
+    """Write s new tokens.  s == 1 uses a ring slot (len % T); s > 1
+    (prefill) writes the last min(s, T) tokens at the buffer head."""
+    s = k_new.shape[1]
+    t = cache.k.shape[1]
+    if s == 1:
+        slot = jnp.mod(cache.length, t)
+        k = lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                     (0, slot, 0, 0) if cache.k.ndim == 4
+                                     else (0, slot, 0))
+        v = lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                     (0, slot, 0, 0) if cache.v.ndim == 4
+                                     else (0, slot, 0))
+        pos = lax.dynamic_update_slice(cache.pos,
+                                       positions.astype(jnp.int32), (slot,))
+    else:
+        keep = min(s, t)
+        k = lax.dynamic_update_slice(
+            cache.k, k_new[:, -keep:].astype(cache.k.dtype),
+            (0, 0, 0, 0)[:cache.k.ndim])
+        v = lax.dynamic_update_slice(
+            cache.v, v_new[:, -keep:].astype(cache.v.dtype),
+            (0, 0, 0, 0)[:cache.v.ndim])
+        pos = cache.pos.at[:keep].set(positions[-keep:].astype(jnp.int32))
+    return KVCache(k, v, pos, cache.length + s)
+
+
+# --------------------------------------------------------------------
+# chunked (flash-style) grouped attention
+# --------------------------------------------------------------------
+
+def chunked_attention(q, k, v, *, q_pos, kv_pos, causal: bool,
+                      window: int = 0, scale: float, q_chunk: int = 1024,
+                      kv_chunk: int = 1024):
+    """Grouped-query attention without materializing [Sq, Skv].
+
+    q: [B, Sq, H, dk]; k: [B, Skv, KVH, dk]; v: [B, Skv, KVH, dv].
+    q_pos [Sq], kv_pos [Skv] are absolute positions for masking
+    (kv_pos == EMPTY_POS marks unwritten cache slots).
+    """
+    b, sq, h, dk = q.shape
+    skv, kvh, dv = k.shape[1], k.shape[2], v.shape[-1]
+    g = h // kvh
+    qc = sq if sq < q_chunk else q_chunk
+    kc = skv if skv < kv_chunk else kv_chunk
+    while sq % qc:
+        qc //= 2
+    while skv % kc:
+        kc //= 2
+    nq, nk = sq // qc, skv // kc
+
+    qg = q.reshape(b, nq, qc, kvh, g, dk).transpose(1, 0, 3, 4, 2, 5)
+    kr = k.reshape(b, nk, kc, kvh, dk).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(b, nk, kc, kvh, dv).transpose(1, 0, 3, 2, 4)
+    qp = q_pos.reshape(nq, qc)
+    kp = kv_pos.reshape(nk, kc)
+
+    def q_block(qi):
+        qpos, qb = qi               # [qc], [B, KVH, G, qc, dk]
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kpos, kb, vb = kj       # [kc], [B,KVH,kc,dk], [B,KVH,kc,dv]
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = kpos[None, :] < EMPTY_POS
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            else:
+                mask = jnp.broadcast_to(mask, (qc, kc))
+            if window:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bkcv->bkgqv", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, qc), -1e30, dtype=jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, qc), dtype=jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, qc, dv), dtype=jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), (kp, kr, vr))
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    out = lax.map(q_block, (qp, qg))  # [nq, B, KVH, G, qc, dv]
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, dv)
+    return out.astype(v.dtype)
+
+
+# --------------------------------------------------------------------
+# GQA block
+# --------------------------------------------------------------------
+
+def init_gqa(key, cfg: ModelConfig):
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    sc = 1.0 / math.sqrt(d)
+    params = {
+        "wq": truncated_normal(ks[0], (d, h, hd), cfg.pdtype, sc),
+        "wk": truncated_normal(ks[1], (d, kvh, hd), cfg.pdtype, sc),
+        "wv": truncated_normal(ks[2], (d, kvh, hd), cfg.pdtype, sc),
+        "wo": truncated_normal(ks[3], (h, hd, d), cfg.pdtype,
+                               1.0 / math.sqrt(h * hd)),
+    }
+    specs = {
+        "wq": ("fsdp", "tp", None), "wk": ("fsdp", "tp", None),
+        "wv": ("fsdp", "tp", None), "wo": ("tp", None, "fsdp"),
+    }
+    if cfg.qkv_bias:
+        params.update({
+            "bq": jnp.zeros((h, hd), cfg.pdtype),
+            "bk": jnp.zeros((kvh, hd), cfg.pdtype),
+            "bv": jnp.zeros((kvh, hd), cfg.pdtype),
+        })
+        specs.update({"bq": ("tp", None), "bk": ("tp", None),
+                      "bv": ("tp", None)})
+    return params, specs
+
+
+def gqa_attention(p, x, positions, cfg: ModelConfig, rules, *,
+                  cache: Optional[KVCache] = None, causal: bool = True,
+                  window: int = 0, kv_x: Optional[jnp.ndarray] = None,
+                  kv_positions=None, rope: bool = True):
+    """x [B, S, D], positions int32 [S]; returns ([B, S, D], new_cache).
+
+    kv_x switches to cross-attention (encoder output; cache then holds
+    the projected encoder KV, written once at prefill).
+    """
+    b, s, d = x.shape
+    cross = kv_x is not None
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    if rope and not cross:
+        sin, cos = make_rope(positions, cfg.head_dim, cfg.rope_theta,
+                             x.dtype)
+        q = apply_rope(q, sin, cos)
+    q = constrain(q, ("dp", None, "tp", None), rules)
+
+    src = kv_x if cross else x
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    if rope and not cross:
+        k = apply_rope(k, sin, cos)
+    k = constrain(k, ("dp", None, "tp", None), rules)
+
+    if cache is not None and not cross:
+        new_cache = _cache_write(cache, k, v, positions)
+        out = chunked_attention(
+            q, new_cache.k.astype(k.dtype), new_cache.v.astype(v.dtype),
+            q_pos=positions, kv_pos=new_cache.pos, causal=causal,
+            window=window, scale=1.0 / math.sqrt(cfg.head_dim),
+            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    else:
+        new_cache = cache
+        kvp = (kv_positions if kv_positions is not None else
+               jnp.arange(src.shape[1]))
+        out = chunked_attention(q, k, v, q_pos=positions, kv_pos=kvp,
+                                causal=causal and not cross, window=window,
+                                scale=1.0 / math.sqrt(cfg.head_dim),
+                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return constrain(y, ("dp", None, None), rules), new_cache
+
+
+# --------------------------------------------------------------------
+# MLA block (DeepSeek-V3)
+# --------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    sc = 1.0 / math.sqrt(d)
+    params = {
+        "wq_a": truncated_normal(ks[0], (d, qr), cfg.pdtype, sc),
+        "q_norm": jnp.zeros((qr,), cfg.pdtype),
+        "wq_b": truncated_normal(ks[1], (qr, h, nd + rd), cfg.pdtype,
+                                 1.0 / math.sqrt(qr)),
+        "wkv_a": truncated_normal(ks[2], (d, kvr + rd), cfg.pdtype, sc),
+        "kv_norm": jnp.zeros((kvr,), cfg.pdtype),
+        "wk_b": truncated_normal(ks[3], (kvr, h, nd), cfg.pdtype,
+                                 1.0 / math.sqrt(kvr)),
+        "wv_b": truncated_normal(ks[4], (kvr, h, vd), cfg.pdtype,
+                                 1.0 / math.sqrt(kvr)),
+        "wo": truncated_normal(ks[5], (h, vd, d), cfg.pdtype,
+                               1.0 / math.sqrt(h * vd)),
+    }
+    specs = {
+        "wq_a": ("fsdp", None), "q_norm": (None,),
+        "wq_b": ("fsdp", "tp", None),
+        "wkv_a": ("fsdp", None), "kv_norm": (None,),
+        "wk_b": (None, "tp", None), "wv_b": (None, "tp", None),
+        "wo": ("tp", None, "fsdp"),
+    }
+    return params, specs
+
+
+def mla_attention(p, x, positions, cfg: ModelConfig, rules, *,
+                  cache: Optional[KVCache] = None):
+    """MLA; cache holds (c_kv [B,T,kvr], k_rope [B,T,rd], pos [T])."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(nd + rd)
+
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"],
+                  cfg.rmsnorm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])
+    qn, qr_ = q[..., :nd], q[..., nd:]
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    ckv = rms_norm(ckv_full[..., :cfg.kv_lora_rank], p["kv_norm"],
+                   cfg.rmsnorm_eps)
+    krope = ckv_full[..., cfg.kv_lora_rank:]
+    sin, cos = make_rope(positions, rd, cfg.rope_theta, x.dtype)
+    qr_ = apply_rope(qr_, sin, cos)
+    krope = apply_rope(krope[:, :, None, :], sin, cos)[:, :, 0, :]
+
+    if cache is not None:
+        new_cache = _cache_write(cache, ckv, krope, positions)
+    else:
+        new_cache = None
+
+    if cache is not None and s == 1:
+        # absorbed decode in the compressed kv_lora space
+        ckv_all, kr_all, kv_pos = new_cache.k, new_cache.v, new_cache.pos
+        q_abs = jnp.einsum("bshn,rhn->bshr", qn, p["wk_b"])
+        s_c = jnp.einsum("bshr,btr->bhst", q_abs,
+                         ckv_all.astype(q_abs.dtype),
+                         preferred_element_type=jnp.float32)
+        s_r = jnp.einsum("bshk,btk->bhst", qr_, kr_all.astype(qr_.dtype),
+                         preferred_element_type=jnp.float32)
+        logits = (s_c + s_r) * scale
+        valid = kv_pos[None, :] <= positions[..., -1:]
+        logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+        w = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bhst,btr->bshr", w, ckv_all.astype(x.dtype))
+        out = jnp.einsum("bshr,rhv->bshv", ctx, p["wv_b"])
+    else:
+        k_nope = jnp.einsum("btr,rhn->bthn", ckv, p["wk_b"])
+        v = jnp.einsum("btr,rhv->bthv", ckv, p["wv_b"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                      (*k_nope.shape[:3], rd))], axis=-1)
+        qfull = jnp.concatenate([qn, qr_], axis=-1)
+        out = chunked_attention(qfull, k, v, q_pos=positions,
+                                kv_pos=positions, causal=True, scale=scale,
+                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    return constrain(y, ("dp", None, None), rules), new_cache
+
+
+def init_cache_gqa(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    return KVCache(
+        k=jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        pos=jnp.full((max_len,), EMPTY_POS, jnp.int32),
+        length=jnp.zeros((), jnp.int32))
+
+
+def init_cache_mla(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    return KVCache(
+        k=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        v=jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        pos=jnp.full((max_len,), EMPTY_POS, jnp.int32),
+        length=jnp.zeros((), jnp.int32))

@@ -1,0 +1,152 @@
+"""Shared model building blocks: config, norms, RoPE, sharding helpers."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config object covers all 10 assigned architectures."""
+    name: str = "model"
+    family: str = "dense"  # dense | moe | hybrid | ssm | encdec | vlm
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 32
+    d_ff: int = 256
+    vocab_size: int = 1000
+    act: str = "silu"            # silu (SwiGLU) | gelu (GeGLU)
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    rmsnorm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    embed_scale: bool = False   # gemma-style sqrt(d) embedding multiplier
+    # --- MoE (deepseek-v3 / qwen3-moe) ---
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+    moe_group: int = 512        # tokens per dispatch group (§Perf knob)
+    # --- MLA (deepseek-v3) ---
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # --- multi-token prediction (deepseek-v3) ---
+    mtp_depth: int = 0
+    # --- hybrid / ssm ---
+    block_pattern: Tuple[str, ...] = ()   # per-layer: "attn"|"rglru"|"ssd"
+    ssm_state_dim: int = 0
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 64
+    conv_width: int = 4
+    window: int = 0                        # local-attention window
+    lru_width: int = 0
+    # --- encoder-decoder (seamless) ---
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    # --- multimodal stub frontend ---
+    frontend: str = "none"                 # none | patches | frames
+    num_patches: int = 0
+    # --- numerics / scale ---
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    # dry-run probes: explicit ((unit LayerSpecs...), count) plan override
+    plan_override: tuple = ()
+    scan_layers: bool = True    # False -> unroll (exact cost_analysis)
+    q_chunk: int = 1024         # flash-attention block sizes (probes set
+    kv_chunk: int = 1024        # these to seq_len: one block, no loop)
+    # decode-cache sequence sharding over "model": the MLA compressed
+    # cache has no head axis, so without this it replicates across tp
+    # (16x memory).  §Perf hillclimb for deepseek-v3 decode.
+    shard_cache_seq: bool = False
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def pattern(self) -> Tuple[str, ...]:
+        if self.block_pattern:
+            assert len(self.block_pattern) == self.num_layers
+            return self.block_pattern
+        return ("attn",) * self.num_layers
+
+
+# ---------------- sharding helpers ----------------
+# Logical axes: "fsdp" (param / optimizer-state sharding over the data
+# axes, ZeRO-3 style), "tp" (tensor/expert parallel over "model"),
+# "dp" (batch), "sp" (sequence parallel over "model").
+
+def mesh_rules(multi_pod: bool):
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return {"dp": dp, "fsdp": dp, "tp": "model", "sp": "model"}
+
+
+def logical(spec_names, rules) -> P:
+    return P(*(rules.get(s, None) for s in spec_names))
+
+
+def constrain(x, spec_names, rules):
+    if not rules:           # unsharded mode (CPU smoke tests)
+        return x
+    return jax.lax.with_sharding_constraint(x, logical(spec_names, rules))
+
+
+# ---------------- numerics ----------------
+
+def rms_norm(x, scale, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+            * (1.0 + scale.astype(x.dtype)))
+
+
+def make_rope(positions, dim: int, theta: float, dtype):
+    """positions [*, S] -> (sin, cos) each [*, S, dim/2]."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.sin(angles).astype(dtype), jnp.cos(angles).astype(dtype)
+
+
+def apply_rope(x, sin, cos):
+    """x [..., S, H, D]; sin/cos [..., S, D/2] broadcast over heads."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    s = sin[..., None, :]
+    c = cos[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean token cross-entropy in fp32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def truncated_normal(key, shape, dtype, scale):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)

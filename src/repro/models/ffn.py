@@ -1,0 +1,36 @@
+"""Gated FFNs (SwiGLU / GeGLU) with TP sharding."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ModelConfig, act_fn, constrain,
+                                 truncated_normal)
+
+
+def init_ffn(key, cfg: ModelConfig, d_ff: int = 0):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    params = {
+        "w_gate": truncated_normal(ks[0], (d, f), cfg.pdtype,
+                                   1.0 / math.sqrt(d)),
+        "w_up": truncated_normal(ks[1], (d, f), cfg.pdtype,
+                                 1.0 / math.sqrt(d)),
+        "w_down": truncated_normal(ks[2], (f, d), cfg.pdtype,
+                                   1.0 / math.sqrt(f)),
+    }
+    specs = {"w_gate": ("fsdp", "tp"), "w_up": ("fsdp", "tp"),
+             "w_down": ("tp", "fsdp")}
+    return params, specs
+
+
+def ffn(p, x, cfg: ModelConfig, rules):
+    a = act_fn(cfg.act)
+    h = a(jnp.einsum("bsd,df->bsf", x, p["w_gate"])) * \
+        jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = constrain(h, ("dp", None, "tp"), rules)
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    return constrain(y, ("dp", None, None), rules)

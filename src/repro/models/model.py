@@ -1,0 +1,104 @@
+"""Model registry: config -> init / steps / sharding specs bundle."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as tfm
+from repro.models.common import ModelConfig, mesh_rules
+from repro.optim import adamw
+from repro.train import steps as steps_lib
+
+
+def concretize_pspecs(pspecs, shapes, mesh):
+    """Drop sharding on axes the mesh cannot divide evenly.
+
+    GSPMD tolerates uneven sharding via padding, but padded params
+    inflate memory-analysis and add halo traffic; dropping the axis
+    (replicating) is the production-sane default for small/indivisible
+    dims (e.g. MQA kv_heads=1 over tp=16).
+    """
+    def fix(p, shape):
+        if not isinstance(p, P):
+            return p
+        dims = shape.shape if hasattr(shape, "shape") else shape
+        new = []
+        for i, ax in enumerate(p):
+            if ax is None or i >= len(dims):
+                new.append(None if i >= len(dims) else ax)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            new.append(ax if dims[i] % size == 0 else None)
+        return P(*new)
+
+    return jax.tree.map(fix, pspecs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def specs_to_pspecs(specs, rules):
+    """Convert logical-name tuples to PartitionSpecs."""
+    def conv(t):
+        return P(*(rules.get(name, None) for name in t))
+    return jax.tree.map(conv, specs,
+                        is_leaf=lambda x: isinstance(x, tuple) and
+                        all(isinstance(e, (str, type(None))) for e in x))
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ModelConfig
+    opt_cfg: adamw.OptConfig
+    rules: dict
+
+    def init_state(self, key):
+        state, specs = steps_lib.init_train_state(key, self.cfg,
+                                                  self.opt_cfg)
+        return state, specs
+
+    def param_pspecs(self, specs):
+        return specs_to_pspecs(specs, self.rules)
+
+    def state_pspecs(self, specs):
+        pspecs = self.param_pspecs(specs)
+        return steps_lib.TrainState(
+            params=pspecs,
+            opt=adamw.OptState(m=pspecs, v=pspecs, step=P()))
+
+    def train_step(self, microbatches: int = 1):
+        return steps_lib.make_train_step(self.cfg, self.opt_cfg,
+                                         self.rules,
+                                         microbatches=microbatches)
+
+    def prefill_step(self, max_len: int):
+        return steps_lib.make_prefill_step(self.cfg, self.rules,
+                                           max_len=max_len)
+
+    def decode_step(self):
+        return steps_lib.make_decode_step(self.cfg, self.rules)
+
+    def init_caches(self, batch: int, max_len: int):
+        if self.cfg.is_encoder_decoder:
+            return encdec_lib.init_caches(self.cfg, batch, max_len,
+                                          self.cfg.cdtype)
+        return tfm.init_caches(self.cfg, batch, max_len, self.cfg.cdtype)
+
+    def cache_pspecs(self):
+        if self.cfg.is_encoder_decoder:
+            return encdec_lib.cache_specs(self.cfg, self.rules)
+        return tfm.cache_specs(self.cfg, self.rules)
+
+
+def build(cfg: ModelConfig, opt_cfg: Optional[adamw.OptConfig] = None,
+          multi_pod: bool = False, sharded: bool = True) -> ModelBundle:
+    """sharded=False drops all sharding constraints (single-device CPU
+    smoke tests); sharded=True requires an active mesh context."""
+    return ModelBundle(cfg=cfg, opt_cfg=opt_cfg or adamw.OptConfig(),
+                       rules=mesh_rules(multi_pod) if sharded else {})

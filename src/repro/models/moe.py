@@ -1,0 +1,109 @@
+"""Routed mixture-of-experts layer (DeepSeek-V3 / Qwen3-MoE style).
+
+Expert-parallel design: expert weights are sharded over the "model"
+(tp) mesh axis ([E, ...] leading axis partitioned E/tp per chip); token
+dispatch uses the grouped capacity-factor one-hot einsum formulation
+(Switch/MaxText style).  Tokens are reshaped into groups of
+``moe_group`` tokens and capacity is per group, so the dispatch tensor
+is [G, tg, E, C] with C = tg*k/E*cf — linear (not quadratic) in the
+total token count.  Group axis shards over dp, expert axis over tp;
+XLA emits the canonical all_to_all pair around the expert matmuls.
+
+A shared-expert branch (DeepSeek: 1 shared + 256 routed, top-8) runs
+as a plain dense FFN in parallel.  The router adds the standard
+load-balance auxiliary loss; capacity overflow drops tokens (their
+residual passes through), matching production MoE semantics.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (ModelConfig, act_fn, constrain,
+                                 truncated_normal)
+from repro.models.ffn import ffn, init_ffn
+
+MOE_GROUP = 512  # tokens per dispatch group
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": truncated_normal(ks[0], (d, e), jnp.float32,
+                                   1.0 / math.sqrt(d)),
+        "w_gate": truncated_normal(ks[1], (e, d, f), cfg.pdtype,
+                                   1.0 / math.sqrt(d)),
+        "w_up": truncated_normal(ks[2], (e, d, f), cfg.pdtype,
+                                 1.0 / math.sqrt(d)),
+        "w_down": truncated_normal(ks[3], (e, f, d), cfg.pdtype,
+                                   1.0 / math.sqrt(f)),
+    }
+    specs = {
+        "router": (None, None),
+        "w_gate": ("tp", "fsdp", None),
+        "w_up": ("tp", "fsdp", None),
+        "w_down": ("tp", None, "fsdp"),
+    }
+    if cfg.num_shared_experts:
+        sp, ss = init_ffn(ks[4], cfg,
+                          d_ff=cfg.moe_d_ff * cfg.num_shared_experts)
+        params["shared"] = sp
+        specs["shared"] = ss
+    return params, specs
+
+
+def moe(p, x, cfg: ModelConfig, rules):
+    """x [B, S, D] -> ([B, S, D], aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    tg = min(cfg.moe_group or MOE_GROUP, t)
+    g = t // tg
+    assert t % tg == 0, (t, tg)
+    xt = x.reshape(g, tg, d)
+    xt = constrain(xt, ("dp", None, None), rules)
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)        # [g, tg, k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): e * sum_e f_e * p_e
+    onehot = jax.nn.one_hot(expert_idx, e, dtype=jnp.float32)  # [g,tg,k,e]
+    frac_tokens = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+
+    # per-group capacity and slot positions
+    cap = max(k, int(tg * k / e * cfg.capacity_factor))
+    flat_oh = onehot.reshape(g, tg * k, e)
+    pos_in_e = jnp.cumsum(flat_oh, axis=1) * flat_oh - 1.0
+    pos = jnp.max(pos_in_e, axis=-1).reshape(g, tg, k)      # [g, tg, k]
+    keep = (pos < cap) & (pos >= 0)
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+    pos_oh = jax.nn.one_hot(
+        jnp.where(keep, pos, cap).astype(jnp.int32), cap + 1,
+        dtype=cfg.cdtype)[..., :cap]                        # [g, tg, k, c]
+
+    dispatch = jnp.einsum("gtke,gtkc->gtec", onehot.astype(cfg.cdtype),
+                          pos_oh)                           # [g, tg, e, c]
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec",
+                         onehot.astype(cfg.cdtype), pos_oh,
+                         gate_vals.astype(cfg.cdtype))
+
+    xe = jnp.einsum("gtd,gtec->gecd", xt.astype(cfg.cdtype), dispatch)
+    xe = constrain(xe, ("dp", "tp", None, None), rules)     # a2a to experts
+    a = act_fn(cfg.act)
+    h = a(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])) * \
+        jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    ye = constrain(ye, ("dp", "tp", None, None), rules)
+    y = jnp.einsum("gecd,gtec->gtd", ye, combine)           # a2a back
+
+    if cfg.num_shared_experts:
+        y = y + ffn(p["shared"], x, cfg, rules).reshape(g, tg, d)
+    return constrain(y.reshape(b, s, d), ("dp", None, None), rules), aux

@@ -1,0 +1,118 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+a_t = exp(-c * softplus(Lambda) * sigmoid(r_t)),   c = 8
+
+The linear recurrence is evaluated with jax.lax.associative_scan
+(log-depth on sequence), the TPU-idiomatic replacement for the paper's
+custom fused scan kernel.  Decode is a single O(1) state update.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import ModelConfig, constrain, truncated_normal
+
+_C = 8.0
+
+
+class RGLRUCache(NamedTuple):
+    conv: jnp.ndarray    # [B, convw-1, W] rolling conv inputs
+    state: jnp.ndarray   # [B, W] recurrent hidden state (fp32)
+    length: jnp.ndarray
+
+
+def init_rglru(key, cfg: ModelConfig):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    params = {
+        "w_x": truncated_normal(ks[0], (d, w), cfg.pdtype,
+                                1.0 / math.sqrt(d)),
+        "w_gate": truncated_normal(ks[1], (d, w), cfg.pdtype,
+                                   1.0 / math.sqrt(d)),
+        "conv_w": truncated_normal(ks[2], (cfg.conv_width, w), cfg.pdtype,
+                                   0.5),
+        "conv_b": jnp.zeros((w,), cfg.pdtype),
+        "w_r": truncated_normal(ks[3], (w, w), cfg.pdtype,
+                                1.0 / math.sqrt(w)),
+        "w_i": truncated_normal(ks[4], (w, w), cfg.pdtype,
+                                1.0 / math.sqrt(w)),
+        # Lambda init so a^c spans ~(0.9, 0.999)
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, w)) / _C)).astype(jnp.float32),
+        "w_out": truncated_normal(ks[5], (w, d), cfg.pdtype,
+                                  1.0 / math.sqrt(w)),
+    }
+    specs = {"w_x": ("fsdp", "tp"), "w_gate": ("fsdp", "tp"),
+             "conv_w": (None, "tp"), "conv_b": ("tp",),
+             "w_r": ("tp", None), "w_i": ("tp", None), "lam": (None,),
+             "w_out": ("tp", "fsdp")}
+    return params, specs
+
+
+def _gates(prm, u):
+    """u [B,S,W] (conv output) -> (a log-decay fp32, gated input fp32)."""
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, prm["w_r"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, prm["w_i"])
+                       .astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(prm["lam"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * \
+        (i * u.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_block(prm, x, cfg: ModelConfig, rules, cache: RGLRUCache = None):
+    """x [B, S, D] -> ([B, S, D], new_cache)."""
+    b, s, d = x.shape
+    xw = jnp.einsum("bsd,dw->bsw", x, prm["w_x"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, prm["w_gate"]))
+
+    if cache is not None and s == 1:
+        window = jnp.concatenate([cache.conv, xw], axis=1)
+        u = jax.nn.silu(jnp.einsum("bkw,kw->bw", window, prm["conv_w"]) +
+                        prm["conv_b"])[:, None, :]
+        a, gated = _gates(prm, u)
+        h = a[:, 0] * cache.state + gated[:, 0]
+        y = h[:, None, :]
+        new_cache = RGLRUCache(window[:, 1:, :], h, cache.length + 1)
+    else:
+        k = prm["conv_w"].shape[0]
+        xw_pad = jnp.pad(xw, ((0, 0), (k - 1, 0), (0, 0)))
+        u = jax.nn.silu(lax.conv_general_dilated(
+            xw_pad, prm["conv_w"][:, None, :], (1,), "VALID",
+            dimension_numbers=("NWC", "WIO", "NWC"),
+            feature_group_count=xw.shape[-1]) + prm["conv_b"])
+        a, gated = _gates(prm, u)
+        if cache is not None:
+            gated = gated.at[:, 0].add(a[:, 0] * cache.state)
+        # associative linear recurrence: (a, b) pairs compose as
+        # (a1*a2, a2*b1 + b2); scan along sequence axis.
+        aa, hh = lax.associative_scan(
+            lambda l, r: (l[0] * r[0], r[0] * l[1] + r[1]),
+            (a, gated), axis=1)
+        y = hh
+        if cache is not None:
+            tail = xw[:, -(k - 1):, :]
+            new_cache = RGLRUCache(tail.astype(cache.conv.dtype),
+                                   hh[:, -1], cache.length + s)
+        else:
+            new_cache = None
+
+    y = y.astype(x.dtype) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, prm["w_out"])
+    return constrain(out, ("dp", None, None), rules), new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype):
+    w = cfg.lru_width or cfg.d_model
+    return RGLRUCache(conv=jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+                      state=jnp.zeros((batch, w), jnp.float32),
+                      length=jnp.zeros((), jnp.int32))

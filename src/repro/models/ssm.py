@@ -1,0 +1,191 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Chunked SSD: the sequence is split into chunks of ``ssm_chunk`` tokens;
+within a chunk the output is the quadratic (attention-like) masked
+kernel, across chunks a recurrent state [H, P, N] is carried by a
+lax.scan — O(S) time, O(chunk^2) working set, sub-quadratic overall,
+which is what qualifies mamba2 for the long_500k shape.
+
+Decode is the pure recurrent form: one state update per token,
+independent of context length.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import ModelConfig, constrain, truncated_normal
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray    # [B, convw-1, d_conv_in] rolling conv inputs
+    state: jnp.ndarray   # [B, H, P, N] recurrent SSM state
+    length: jnp.ndarray
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    p = cfg.ssm_head_dim
+    h = d_inner // p
+    n = cfg.ssm_state_dim
+    return d_inner, h, p, n
+
+
+def init_ssd(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, h, p, n = _dims(cfg)
+    conv_in = d_inner + 2 * n
+    ks = jax.random.split(key, 5)
+    params = {
+        # in_proj -> [z (gate), x, B, C, dt]
+        "w_in": truncated_normal(ks[0], (d, 2 * d_inner + 2 * n + h),
+                                 cfg.pdtype, 1.0 / math.sqrt(d)),
+        "conv_w": truncated_normal(ks[1], (cfg.conv_width, conv_in),
+                                   cfg.pdtype, 0.5),
+        "conv_b": jnp.zeros((conv_in,), cfg.pdtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), cfg.pdtype),
+        "w_out": truncated_normal(ks[2], (d_inner, d), cfg.pdtype,
+                                  1.0 / math.sqrt(d_inner)),
+    }
+    specs = {
+        "w_in": ("fsdp", "tp"), "conv_w": (None, "tp"), "conv_b": ("tp",),
+        "a_log": (None,), "dt_bias": (None,), "d_skip": (None,),
+        "norm": ("tp",), "w_out": ("tp", "fsdp"),
+    }
+    return params, specs
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv: u [B, S, C], w [K, C] -> [B, S, C]."""
+    k = w.shape[0]
+    u_pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = lax.conv_general_dilated(
+        u_pad, w[:, None, :], window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=u.shape[-1])
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(xh, dt, a, bmat, cmat, chunk: int, state0=None,
+                 unroll: bool = False):
+    """Chunked SSD scan.
+
+    xh [B,S,H,P], dt [B,S,H] (softplus'd), a [H] (positive decay rate),
+    bmat/cmat [B,S,N].  Returns (y [B,S,H,P], final state [B,H,P,N]).
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    nc = s // q
+    assert s % q == 0
+    da = dt * (-a)[None, None, :]                 # [B,S,H] log-decay (<0)
+    xd = xh * dt[..., None]
+
+    xc = xd.reshape(b, nc, q, h, p)
+    dac = da.reshape(b, nc, q, h)
+    bc = bmat.reshape(b, nc, q, n)
+    cc = cmat.reshape(b, nc, q, n)
+
+    def chunk_step(state, inp):
+        xq, daq, bq, cq = inp                     # [B,q,h,p],[B,q,h],...
+        cum = jnp.cumsum(daq, axis=1)             # [B,q,h]
+        # within-chunk quadratic term: L[i,j] = exp(cum_i - cum_j) (i>=j)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]     # [B,q,q,h]
+        mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+        # mask BEFORE exp: exp of masked +large would leak NaN into the
+        # backward pass through the where.
+        lmat = jnp.exp(jnp.where(mask[None, :, :, None], diff, -1e30))
+        scores = jnp.einsum("bin,bjn->bij", cq, bq,
+                            preferred_element_type=jnp.float32)
+        w = scores[:, :, :, None] * lmat            # [B, q, q, h]
+        y_diag = jnp.einsum("bijh,bjhp->bihp", w,
+                            xq.astype(jnp.float32))
+        # contribution of the incoming state
+        decay_in = jnp.exp(cum)                   # [B,q,h]
+        y_off = jnp.einsum("bin,bhpn,bih->bihp", cq, state,
+                           decay_in.astype(jnp.float32))
+        # new state = decayed old + chunk contribution
+        total = cum[:, -1:, :]                    # [B,1,h]
+        decay_out = jnp.exp(total - cum)          # [B,q,h]
+        state_new = state * jnp.exp(total)[:, 0, :, None, None] + \
+            jnp.einsum("bjn,bjh,bjhp->bhpn", bq, decay_out.astype(jnp.float32),
+                       xq.astype(jnp.float32))
+        return state_new, (y_diag + y_off)
+
+    state0 = (jnp.zeros((b, h, p, n), jnp.float32)
+              if state0 is None else state0)
+    xs = (xc.transpose(1, 0, 2, 3, 4), dac.transpose(1, 0, 2, 3),
+          bc.transpose(1, 0, 2, 3), cc.transpose(1, 0, 2, 3))
+    state, ys = lax.scan(chunk_step, state0, xs, unroll=unroll)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y.astype(xh.dtype), state
+
+
+def ssd_block(prm, x, cfg: ModelConfig, rules, cache: SSMCache = None):
+    """Mamba-2 mixer. x [B, S, D] -> ([B, S, D], new_cache)."""
+    b, s, d = x.shape
+    d_inner, h, p, n = _dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, prm["w_in"])
+    z, rest = proj[..., :d_inner], proj[..., d_inner:]
+    xbc, dt_raw = rest[..., :d_inner + 2 * n], rest[..., d_inner + 2 * n:]
+
+    if cache is not None and s == 1:
+        # decode: rolling conv window + O(1) state update
+        window = jnp.concatenate([cache.conv, xbc], axis=1)
+        conv_out = jax.nn.silu(
+            jnp.einsum("bkc,kc->bc", window, prm["conv_w"]) +
+            prm["conv_b"])[:, None, :]
+        new_conv = window[:, 1:, :]
+        xh = conv_out[..., :d_inner].reshape(b, 1, h, p)
+        bmat = conv_out[..., d_inner:d_inner + n]
+        cmat = conv_out[..., d_inner + n:]
+        dt = jax.nn.softplus(dt_raw[:, 0, :].astype(jnp.float32) +
+                             prm["dt_bias"])              # [B,H]
+        a = jnp.exp(prm["a_log"])
+        da = jnp.exp(-dt * a)                              # [B,H]
+        upd = jnp.einsum("bn,bhp,bh->bhpn", bmat[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32), dt)
+        state = cache.state * da[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0].astype(jnp.float32),
+                       state)[:, None]
+        y = y.reshape(b, 1, h, p)
+        new_cache = SSMCache(new_conv, state, cache.length + 1)
+    else:
+        conv_out = _causal_conv(xbc, prm["conv_w"], prm["conv_b"])
+        xh = conv_out[..., :d_inner].reshape(b, s, h, p)
+        bmat = conv_out[..., d_inner:d_inner + n]
+        cmat = conv_out[..., d_inner + n:]
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + prm["dt_bias"])
+        a = jnp.exp(prm["a_log"])
+        state0 = cache.state if cache is not None else None
+        y, state = _ssd_chunked(xh, dt, a, bmat, cmat, cfg.ssm_chunk,
+                                state0, unroll=not cfg.scan_layers)
+        if cache is not None:
+            tail = xbc[:, -(cfg.conv_width - 1):, :]
+            new_cache = SSMCache(tail.astype(cache.conv.dtype), state,
+                                 cache.length + s)
+        else:
+            new_cache = None
+
+    y = y.astype(x.dtype) + xh.astype(x.dtype) * \
+        prm["d_skip"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, -1, d_inner) * jax.nn.silu(z)
+    from repro.models.common import rms_norm
+    y = rms_norm(y, prm["norm"], cfg.rmsnorm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, prm["w_out"])
+    return constrain(out, ("dp", None, None), rules), new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype):
+    d_inner, h, p, n = _dims(cfg)
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, d_inner + 2 * n), dtype),
+        state=jnp.zeros((batch, h, p, n), jnp.float32),
+        length=jnp.zeros((), jnp.int32))

@@ -1,0 +1,350 @@
+"""Decoder-only transformer stack for all assigned LM architectures.
+
+Layer mixers dispatch on the config pattern: "attn" (GQA), "mla"
+(DeepSeek), "rglru" (RecurrentGemma), "ssd" (Mamba-2); FFN kind is
+dense or MoE per layer.  Consecutive identical layers are *stacked*
+and executed with jax.lax.scan (+ optional remat) so the lowered HLO
+stays small at 61-94 layer depth; hybrid patterns (RecurrentGemma's
+rec-rec-attn) are detected as a repeating unit and scanned over units,
+with any remainder layers unrolled.
+
+Public entry points (used by the registry in model.py):
+  init_model(key, cfg)       -> (params, specs)
+  forward(params, cfg, rules, tokens/embeds, positions, caches, ...)
+  init_caches(cfg, batch, max_len, dtype)
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import ffn as ffn_lib
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.common import (ModelConfig, constrain, rms_norm,
+                                 truncated_normal)
+
+LayerSpec = Tuple[str, str, int]  # (mixer, ffn_kind, window)
+
+
+# ----------------------------- plan ---------------------------------
+
+def layer_specs(cfg: ModelConfig) -> List[LayerSpec]:
+    out = []
+    for i, mixer in enumerate(cfg.pattern()):
+        if cfg.num_experts and i >= cfg.first_dense_layers:
+            ffn_kind = "moe"
+        elif cfg.d_ff == 0:
+            ffn_kind = "none"   # mamba2: mixer-only blocks
+        else:
+            ffn_kind = "dense"
+        window = cfg.window if (mixer == "attn" and cfg.window) else 0
+        out.append((mixer, ffn_kind, window))
+    return out
+
+
+def build_plan(cfg: ModelConfig) -> List[Tuple[Tuple[LayerSpec, ...], int]]:
+    """Compress per-layer specs into [(unit, count)] stacks."""
+    if cfg.plan_override:
+        return [(tuple(tuple(s) for s in unit), count)
+                for unit, count in cfg.plan_override]
+    specs = layer_specs(cfg)
+    n = len(specs)
+    # try a short repeating period (hybrid patterns)
+    for p in range(1, 9):
+        if all(specs[i] == specs[i % p] for i in range(n)) and n // p >= 2:
+            unit = tuple(specs[:p])
+            full = n // p
+            plan = [(unit, full)]
+            if n % p:
+                plan.append((tuple(specs[full * p:]), 1))
+            return plan
+    # fall back to maximal runs of identical layers
+    plan = []
+    i = 0
+    while i < n:
+        j = i
+        while j < n and specs[j] == specs[i]:
+            j += 1
+        plan.append(((specs[i],), j - i))
+        i = j
+    return plan
+
+
+# --------------------------- init -----------------------------------
+
+def _init_layer(key, cfg: ModelConfig, spec: LayerSpec):
+    mixer, ffn_kind, _ = spec
+    k1, k2 = jax.random.split(key)
+    if mixer == "attn":
+        mp, ms = attn_lib.init_gqa(k1, cfg)
+    elif mixer == "mla":
+        mp, ms = attn_lib.init_mla(k1, cfg)
+    elif mixer == "rglru":
+        mp, ms = rglru_lib.init_rglru(k1, cfg)
+    elif mixer == "ssd":
+        mp, ms = ssm_lib.init_ssd(k1, cfg)
+    else:
+        raise ValueError(mixer)
+    if ffn_kind == "moe":
+        fp, fs = moe_lib.init_moe(k2, cfg)
+    elif ffn_kind == "none":
+        fp, fs = {}, {}
+    else:
+        fp, fs = ffn_lib.init_ffn(k2, cfg)
+    params = {"mixer": mp, "ffn": fp,
+              "ln1": jnp.zeros((cfg.d_model,), cfg.pdtype),
+              "ln2": jnp.zeros((cfg.d_model,), cfg.pdtype)}
+    specs = {"mixer": ms, "ffn": fs, "ln1": (None,), "ln2": (None,)}
+    return params, specs
+
+
+def _stack_init(key, cfg: ModelConfig, unit, count: int):
+    """Init `count` copies of `unit`, stacking arrays on a leading axis."""
+    def unit_init(k):
+        ps, ss = [], None
+        for j, spec in enumerate(unit):
+            p, s = _init_layer(jax.random.fold_in(k, j), cfg, spec)
+            ps.append(p)
+            ss = ss or []
+            ss.append(s)
+        return {f"slot{j}": p for j, p in enumerate(ps)}, \
+            {f"slot{j}": s for j, s in enumerate(ss)}
+
+    keys = jax.random.split(key, count)
+    p0, s0 = unit_init(keys[0])
+    if count == 1:
+        return jax.tree.map(lambda a: a[None], p0), \
+            jax.tree.map(lambda sp: (None, *sp), s0,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    stacked = jax.vmap(lambda k: unit_init(k)[0])(keys)
+    specs = jax.tree.map(lambda sp: (None, *sp), s0,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return stacked, specs
+
+
+def init_model(key, cfg: ModelConfig):
+    plan = build_plan(cfg)
+    ks = jax.random.split(key, len(plan) + 4)
+    params: dict = {}
+    specs: dict = {}
+    params["embed"] = truncated_normal(
+        ks[0], (cfg.vocab_size, cfg.d_model), cfg.pdtype,
+        1.0 / math.sqrt(cfg.d_model))
+    specs["embed"] = ("tp", "fsdp")
+    params["final_norm"] = jnp.zeros((cfg.d_model,), cfg.pdtype)
+    specs["final_norm"] = (None,)
+    if not cfg.tie_embeddings:
+        params["head"] = truncated_normal(
+            ks[1], (cfg.d_model, cfg.vocab_size), cfg.pdtype,
+            1.0 / math.sqrt(cfg.d_model))
+        specs["head"] = ("fsdp", "tp")
+    for si, (unit, count) in enumerate(plan):
+        p, s = _stack_init(ks[2 + si], cfg, unit, count)
+        params[f"stack{si}"] = p
+        specs[f"stack{si}"] = s
+    if cfg.mtp_depth:
+        # DeepSeek-V3 multi-token prediction: one extra transformer
+        # layer + projection predicting token t+2 from [h_t; emb_{t+1}].
+        mp, ms = _init_layer(ks[-2], cfg, ("mla" if cfg.use_mla else "attn",
+                                           "dense", 0))
+        params["mtp"] = {
+            "proj": truncated_normal(ks[-1], (2 * cfg.d_model, cfg.d_model),
+                                     cfg.pdtype,
+                                     1.0 / math.sqrt(2 * cfg.d_model)),
+            "norm": jnp.zeros((cfg.d_model,), cfg.pdtype),
+            "layer": mp,
+        }
+        specs["mtp"] = {"proj": ("fsdp", None), "norm": (None,),
+                        "layer": ms}
+    return params, specs
+
+
+# --------------------------- apply ----------------------------------
+
+def _apply_layer(spec: LayerSpec, prm, x, positions, cfg, rules, cache):
+    mixer, ffn_kind, window = spec
+    h = rms_norm(x, prm["ln1"], cfg.rmsnorm_eps)
+    if mixer == "attn":
+        out, new_cache = attn_lib.gqa_attention(
+            prm["mixer"], h, positions, cfg, rules, cache=cache,
+            window=window)
+    elif mixer == "mla":
+        out, new_cache = attn_lib.mla_attention(
+            prm["mixer"], h, positions, cfg, rules, cache=cache)
+    elif mixer == "rglru":
+        out, new_cache = rglru_lib.rglru_block(prm["mixer"], h, cfg, rules,
+                                               cache)
+    elif mixer == "ssd":
+        out, new_cache = ssm_lib.ssd_block(prm["mixer"], h, cfg, rules,
+                                           cache)
+    else:
+        raise ValueError(mixer)
+    x = x + out
+    if ffn_kind == "none":
+        return x, new_cache, jnp.zeros(())
+    h = rms_norm(x, prm["ln2"], cfg.rmsnorm_eps)
+    if ffn_kind == "moe":
+        y, aux = moe_lib.moe(prm["ffn"], h, cfg, rules)
+    else:
+        y, aux = ffn_lib.ffn(prm["ffn"], h, cfg, rules), jnp.zeros(())
+    return x + y, new_cache, aux
+
+
+def _run_stack(unit, prm_stack, x, positions, cfg, rules, cache_stack):
+    """Scan over `count` stacked units."""
+    has_cache = cache_stack is not None
+
+    def body(carry, xs):
+        xc, aux_acc = carry
+        if has_cache:
+            unit_prm, unit_cache = xs
+        else:
+            unit_prm, unit_cache = xs, None
+        new_caches = {}
+        for j, spec in enumerate(unit):
+            c = unit_cache[f"slot{j}"] if has_cache else None
+            xc, nc, aux = _apply_layer(spec, unit_prm[f"slot{j}"], xc,
+                                       positions, cfg, rules, c)
+            new_caches[f"slot{j}"] = nc
+        return (xc, aux_acc + aux), (new_caches if has_cache else 0)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    xs = (prm_stack, cache_stack) if has_cache else prm_stack
+    if not cfg.scan_layers:
+        # unrolled (dry-run probes: exact cost_analysis, no while loop)
+        count = jax.tree.leaves(prm_stack)[0].shape[0]
+        carry = (x, jnp.zeros(()))
+        ys_list = []
+        for i in range(count):
+            carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+            ys_list.append(y)
+        (x, aux) = carry
+        if has_cache:
+            ys = jax.tree.map(lambda *a: jnp.stack(a), *ys_list)
+            return x, aux, ys
+        return x, aux, None
+    (x, aux), ys = jax.lax.scan(body, (x, jnp.zeros(())), xs)
+    return x, aux, (ys if has_cache else None)
+
+
+def forward(params, cfg: ModelConfig, rules, tokens=None, *,
+            embeds=None, positions=None, caches=None,
+            prefix_embeds=None, return_hidden: bool = False):
+    """Run the stack.
+
+    tokens [B, S] int32 and/or embeds [B, S, D] (exactly one, or
+    prefix_embeds [B, P, D] prepended to token embeddings — the VLM
+    path).  caches: list (one entry per stack) or None.
+    Returns (logits [B, S', V], new_caches, aux_loss).
+    """
+    if embeds is None:
+        x = params["embed"][tokens]
+        if cfg.family in ("vlm",) and prefix_embeds is not None:
+            x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    else:
+        x = embeds.astype(cfg.cdtype)
+    b, s, _ = x.shape
+    x = x.astype(cfg.cdtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if positions is None:
+        positions = jnp.arange(s)
+    x = constrain(x, ("dp", None, None), rules)
+
+    plan = build_plan(cfg)
+    new_caches = []
+    aux_total = jnp.zeros(())
+    for si, (unit, count) in enumerate(plan):
+        cs = caches[si] if caches is not None else None
+        x, aux, nc = _run_stack(unit, params[f"stack{si}"], x, positions,
+                                cfg, rules, cs)
+        aux_total = aux_total + aux
+        new_caches.append(nc)
+    x = rms_norm(x, params["final_norm"], cfg.rmsnorm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    logits = constrain(logits, ("dp", None, "tp"), rules)
+    if return_hidden:
+        return logits, (new_caches if caches is not None else None), \
+            aux_total, x
+    return logits, (new_caches if caches is not None else None), aux_total
+
+
+def mtp_logits(params, cfg: ModelConfig, rules, hidden, next_tokens,
+               positions):
+    """DeepSeek-V3 MTP head: predict token t+2 from (h_t, emb(t+1))."""
+    prm = params["mtp"]
+    emb = params["embed"][next_tokens].astype(hidden.dtype)
+    h = jnp.concatenate([rms_norm(hidden, prm["norm"], cfg.rmsnorm_eps),
+                         emb], axis=-1)
+    h = jnp.einsum("bsd,de->bse", h, prm["proj"])
+    spec = ("mla" if cfg.use_mla else "attn", "dense", 0)
+    h, _, _ = _apply_layer(spec, prm["layer"], h, positions, cfg, rules,
+                           None)
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    return jnp.einsum("bsd,dv->bsv", h, head.astype(h.dtype))
+
+
+# --------------------------- caches ---------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    """Per-stack stacked caches matching the scan layout."""
+    plan = build_plan(cfg)
+    caches = []
+    for unit, count in plan:
+        unit_caches = {}
+        for j, (mixer, _, window) in enumerate(unit):
+            t = min(window, max_len) if window else max_len
+            if mixer == "attn":
+                c = attn_lib.init_cache_gqa(cfg, batch, t, dtype)
+            elif mixer == "mla":
+                c = attn_lib.init_cache_mla(cfg, batch, t, dtype)
+            elif mixer == "rglru":
+                c = rglru_lib.init_rglru_cache(cfg, batch, dtype)
+            else:
+                c = ssm_lib.init_ssm_cache(cfg, batch, dtype)
+            unit_caches[f"slot{j}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (count, *a.shape)), c)
+        caches.append(unit_caches)
+    return caches
+
+
+def cache_specs(cfg: ModelConfig, rules):
+    """PartitionSpec tree for the cache pytree (batch over dp; heads /
+    feature dims over tp where applicable)."""
+    from jax.sharding import PartitionSpec as P
+    plan = build_plan(cfg)
+    dp = rules["dp"]
+    tp = rules["tp"]
+    seq = tp if cfg.shard_cache_seq else None
+    out = []
+    for unit, count in plan:
+        unit_specs = {}
+        for j, (mixer, _, _) in enumerate(unit):
+            if mixer == "attn":
+                kv_tp = None if cfg.shard_cache_seq else tp
+                spec = attn_lib.KVCache(P(None, dp, seq, kv_tp, None),
+                                        P(None, dp, seq, kv_tp, None),
+                                        P(None, seq), P(None))
+            elif mixer == "mla":
+                spec = attn_lib.KVCache(P(None, dp, seq, None),
+                                        P(None, dp, seq, None),
+                                        P(None, seq), P(None))
+            elif mixer == "rglru":
+                spec = rglru_lib.RGLRUCache(P(None, dp, None, tp),
+                                            P(None, dp, tp), P(None))
+            else:
+                spec = ssm_lib.SSMCache(P(None, dp, None, tp),
+                                        P(None, dp, tp, None, None),
+                                        P(None))
+            unit_specs[f"slot{j}"] = spec
+        out.append(unit_specs)
+    return out

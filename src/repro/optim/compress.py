@@ -1,0 +1,80 @@
+"""Gradient compression for slow inter-pod links.
+
+Top-k sparsification with error feedback (Deep Gradient Compression
+style): each data-parallel worker keeps a residual; before the cross-
+pod reduction only the top-k fraction of coordinates (by magnitude)
+are exchanged, the rest accumulate into the residual for later steps.
+Convergence-neutral in expectation thanks to error feedback.
+
+Also provides int8 stochastic quantization (1 scale per tensor).
+
+These operate at the shard_map level (explicit psum of the compressed
+payload); the pjit training path keeps dense reductions — compression
+is an opt-in launcher flag for bandwidth-constrained multi-pod runs.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+class ErrorFeedback(NamedTuple):
+    residual: Any  # pytree matching grads
+
+
+def init_error_feedback(grads) -> ErrorFeedback:
+    return ErrorFeedback(jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+def topk_compress(g: jnp.ndarray, frac: float):
+    """Keep the top ceil(frac * size) coords; return (values, idx)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(1, int(frac * flat.shape[0]))
+    vals, idx = lax.top_k(jnp.abs(flat), k)
+    picked = flat[idx]
+    return picked, idx, flat.shape[0]
+
+
+def topk_decompress(vals, idx, size, shape):
+    return jnp.zeros((size,), jnp.float32).at[idx].set(vals).reshape(shape)
+
+
+def compressed_psum(grads, ef: ErrorFeedback, axis_name, frac: float):
+    """psum(grads) over axis_name, exchanging only top-k coordinates.
+
+    Each worker densifies its own sparse payload then psums the dense
+    buffer of only the selected coords' union — on TPU we implement the
+    exchange as psum of the scattered buffer (bandwidth win comes from
+    frac; semantics == allreduce of the compressed gradients).
+    Returns (reduced_grads, new_error_feedback).
+    """
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        vals, idx, size = topk_compress(acc, frac)
+        sent = topk_decompress(vals, idx, size, g.shape)
+        new_r = acc - sent
+        return lax.psum(sent, axis_name), new_r
+
+    out = jax.tree.map(one, grads, ef.residual)
+    red = jax.tree.map(lambda t: t[0], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[1], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return red, ErrorFeedback(res)
+
+
+def int8_quantize(g: jnp.ndarray, key):
+    """Stochastic int8 quantization; returns (q, scale)."""
+    scale = jnp.max(jnp.abs(g.astype(jnp.float32))) / 127.0 + 1e-12
+    x = g.astype(jnp.float32) / scale
+    noise = jax.random.uniform(key, g.shape) - 0.5
+    q = jnp.clip(jnp.round(x + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q, scale):
+    return q.astype(jnp.float32) * scale

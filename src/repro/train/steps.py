@@ -1,0 +1,142 @@
+"""train_step / prefill_step / decode_step builders for every family.
+
+These are the functions the launcher jits with in/out shardings; the
+dry-run lowers exactly these.  Microbatched gradient accumulation
+(lax.scan over microbatches) bounds activation memory at long
+sequence; remat policy comes from the model config.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as tfm
+from repro.models.common import ModelConfig, cross_entropy
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.OptState
+
+
+def _loss_fn(params, cfg: ModelConfig, rules, batch):
+    if cfg.is_encoder_decoder:
+        enc_out = encdec_lib.encode(params, cfg, rules, batch["frames"])
+        tokens = batch["tokens"]
+        logits, _ = encdec_lib.decode(params, cfg, rules, tokens[:, :-1],
+                                      enc_out)
+        loss = cross_entropy(logits, tokens[:, 1:])
+        return loss, {"loss": loss}
+    tokens = batch["tokens"]
+    prefix = batch.get("patches") if cfg.family == "vlm" else None
+    logits, _, aux, hidden = tfm.forward(params, cfg, rules, tokens[:, :-1],
+                                         prefix_embeds=prefix,
+                                         return_hidden=True)
+    if prefix is not None:
+        logits = logits[:, prefix.shape[1]:]
+        hidden = hidden[:, prefix.shape[1]:]
+    loss = cross_entropy(logits, tokens[:, 1:])
+    metrics = {"loss": loss}
+    total = loss
+    if cfg.num_experts:
+        total = total + cfg.router_aux_weight * aux
+        metrics["aux_loss"] = aux
+    if cfg.mtp_depth:
+        # MTP: predict token t+2 from (hidden_t, emb(token_{t+1})).
+        mtp = tfm.mtp_logits(params, cfg, rules, hidden[:, :-1],
+                             tokens[:, 1:-1],
+                             jnp.arange(tokens.shape[1] - 2))
+        mtp_loss = cross_entropy(mtp, tokens[:, 2:])
+        total = total + 0.3 * mtp_loss
+        metrics["mtp_loss"] = mtp_loss
+    return total, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig, rules, *,
+                    microbatches: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def train_step(state: TrainState, batch):
+        if microbatches > 1:
+            b = batch["tokens"].shape[0]
+            mb = b // microbatches
+
+            def micro(carry, mbatch):
+                g_acc, l_acc = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    lambda p: _loss_fn(p, cfg, rules, mbatch),
+                    has_aux=True)(state.params)
+                g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                return (g_acc, l_acc + loss), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state.params)
+            stacked = jax.tree.map(
+                lambda x: x.reshape(microbatches, mb, *x.shape[1:]), batch)
+            (grads, loss), _ = jax.lax.scan(micro, (zeros, 0.0), stacked)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = {"loss": loss / microbatches}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: _loss_fn(p, cfg, rules, batch),
+                has_aux=True)(state.params)
+        new_params, new_opt, opt_metrics = adamw.update(
+            grads, state.opt, state.params, opt_cfg)
+        metrics.update(opt_metrics)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, rules, *, max_len: int):
+    """prefill(params, batch) -> (next_token_logits, caches)."""
+
+    def prefill(params, batch):
+        if cfg.is_encoder_decoder:
+            enc_out = encdec_lib.encode(params, cfg, rules, batch["frames"])
+            caches = encdec_lib.init_caches(
+                cfg, batch["tokens"].shape[0], max_len, cfg.cdtype)
+            logits, caches = encdec_lib.decode(
+                params, cfg, rules, batch["tokens"], enc_out, caches=caches)
+            return logits[:, -1], (caches, enc_out)
+        tokens = batch["tokens"]
+        prefix = batch.get("patches") if cfg.family == "vlm" else None
+        s = tokens.shape[1] + (prefix.shape[1] if prefix is not None else 0)
+        caches = tfm.init_caches(cfg, tokens.shape[0], max_len, cfg.cdtype)
+        logits, caches, _ = tfm.forward(params, cfg, rules, tokens,
+                                        prefix_embeds=prefix, caches=caches,
+                                        positions=jnp.arange(s))
+        return logits[:, -1], caches
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, rules):
+    """decode(params, carry, token [B,1], position []) ->
+    (logits [B, V], new_carry).  carry = caches (+ enc_out)."""
+
+    def decode(params, carry, token, position):
+        pos = position[None]
+        if cfg.is_encoder_decoder:
+            caches, enc_out = carry
+            logits, caches = encdec_lib.decode(params, cfg, rules, token,
+                                               enc_out, positions=pos,
+                                               caches=caches)
+            return logits[:, -1], (caches, enc_out)
+        logits, caches, _ = tfm.forward(params, cfg, rules, token,
+                                        positions=pos, caches=carry)
+        return logits[:, -1], caches
+
+    return decode
+
+
+def init_train_state(key, cfg: ModelConfig, opt_cfg: adamw.OptConfig):
+    init = (encdec_lib.init_model if cfg.is_encoder_decoder
+            else tfm.init_model)
+    params, specs = init(key, cfg)
+    return TrainState(params, adamw.init(params, opt_cfg)), specs

@@ -1,0 +1,47 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitset
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 300), st.integers(0, 2**31))
+def test_pack_unpack_roundtrip(n, theta, seed):
+    rng = np.random.default_rng(seed)
+    dense = rng.random((n, theta)) < 0.3
+    packed = bitset.pack_bool_matrix(jnp.asarray(dense))
+    assert packed.shape == (n, bitset.num_words(theta))
+    back = bitset.unpack_words(packed, theta)
+    np.testing.assert_array_equal(np.asarray(back), dense)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 100), st.integers(1, 200), st.integers(0, 2**31))
+def test_coverage_and_gain_match_dense(n, theta, seed):
+    rng = np.random.default_rng(seed)
+    dense = rng.random((n, theta)) < 0.2
+    covered_dense = rng.random(theta) < 0.3
+    rows = bitset.pack_bool_matrix(jnp.asarray(dense))
+    covered = bitset.pack_bool_matrix(
+        jnp.asarray(covered_dense[None, :]))[0]
+    want_cov = covered_dense.sum()
+    assert int(bitset.coverage_size(covered)) == want_cov
+    gains = np.asarray(bitset.marginal_gain(rows, covered))
+    want = (dense & ~covered_dense[None, :]).sum(axis=1)
+    np.testing.assert_array_equal(gains, want)
+
+
+def test_pack_indices():
+    row = bitset.pack_indices(np.array([0, 31, 32, 95]), 96)
+    assert row.shape == (3,)
+    dense = bitset.unpack_words(jnp.asarray(row[None, :]), 96)[0]
+    assert set(np.nonzero(np.asarray(dense))[0]) == {0, 31, 32, 95}
+
+
+def test_union_and_popcount():
+    a = jnp.asarray([0b1010], dtype=jnp.uint32)
+    b = jnp.asarray([0b0110], dtype=jnp.uint32)
+    assert int(bitset.coverage_size(bitset.union(a, b))) == 3

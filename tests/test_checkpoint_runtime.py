@@ -1,0 +1,94 @@
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import CheckpointStore
+from repro.runtime.fault_tolerance import (PoisonStep, RunSupervisor,
+                                           StragglerMonitor,
+                                           SupervisorConfig)
+
+
+def _tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)},
+            "step": jnp.asarray(3)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    t = _tree()
+    store.save(10, t, blocking=True)
+    restored, step = store.restore(t)
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(t["a"]))
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        store.save(s, t, blocking=True)
+    assert store.list_steps() == [3, 4]
+
+
+def test_checkpoint_crc_detects_corruption(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    t = _tree()
+    store.save(5, t, blocking=True)
+    d = os.path.join(str(tmp_path), "step_000000005")
+    fn = os.path.join(d, "leaf_00000.npy")
+    with open(fn, "r+b") as f:
+        f.seek(-1, 2)
+        f.write(b"\x00")
+    with pytest.raises(IOError):
+        store.restore(t)
+
+
+def test_supervisor_recovers_from_failures(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    cfg = SupervisorConfig(checkpoint_every=2, backoff_s=0.01,
+                           max_restarts=10)
+    sup = RunSupervisor(store, cfg)
+    fail_once = {"done": False}
+
+    def step_fn(state, batch):
+        if batch == 5 and not fail_once["done"]:
+            fail_once["done"] = True
+            raise RuntimeError("injected chip failure")
+        return {"x": state["x"] + 1}, {"loss": 1.0}
+
+    state, final = sup.run({"x": jnp.asarray(0)}, step_fn,
+                           lambda s: s, num_steps=8)
+    assert final == 8
+    assert sup.restarts == 1
+
+
+def test_supervisor_skips_poison_step(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    cfg = SupervisorConfig(checkpoint_every=100, backoff_s=0.01,
+                           poison_threshold=2, max_restarts=10)
+    sup = RunSupervisor(store, cfg)
+
+    def step_fn(state, batch):
+        loss = float("nan") if batch == 3 else 1.0
+        return state, {"loss": loss}
+
+    state, final = sup.run({"x": jnp.asarray(0)}, step_fn, lambda s: s,
+                           num_steps=6)
+    assert final == 6
+    assert 3 in sup.failures_at
+
+
+def test_straggler_monitor_flags_outlier():
+    mon = StragglerMonitor(alpha=0.3)
+    for _ in range(20):
+        assert not mon.observe(1.0)
+    assert mon.observe(10.0)
+    assert mon.suggest_alpha(0.125) == 0.125  # needs >=3 flags
+    mon.flags = 3
+    assert mon.suggest_alpha(0.125) == 0.0625

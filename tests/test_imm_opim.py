@@ -1,0 +1,73 @@
+import jax
+import numpy as np
+
+from repro.core import imm, opim, theory
+from repro.core.diffusion import influence
+from repro.graphs import generators
+
+
+def test_imm_star_graph_finds_hub():
+    g = generators.star(64)
+    res = imm.imm(g, 4, 0.3, jax.random.key(0), max_theta=1024)
+    assert 0 in res.seeds.tolist()
+
+
+def test_imm_quality_vs_greedy_selector():
+    g = generators.preferential_attachment(150, 3, seed=1)
+    key = jax.random.key(1)
+    r_greedy = imm.imm(g, 8, 0.3, key, max_theta=2048)
+    r_gr = imm.imm(g, 8, 0.3, key, max_theta=2048,
+                   selector=imm.make_randgreedi_selector(4, "streaming"))
+    inf_a = float(influence(g, r_greedy.seeds, key, num_sims=32))
+    inf_b = float(influence(g, np.asarray(
+        [s for s in r_gr.seeds if s >= 0]), key, num_sims=32))
+    # paper: ~2.7% mean quality gap; allow generous slack on tiny graphs
+    assert inf_b >= 0.7 * inf_a
+
+
+def test_imm_martingale_rounds_terminate():
+    g = generators.erdos_renyi(100, 6.0, seed=2)
+    res = imm.imm(g, 4, 0.5, jax.random.key(2), max_theta=2048)
+    assert 1 <= res.rounds <= 7
+    assert res.theta % 32 == 0
+    assert 0 < res.coverage_fraction <= 1.0
+
+
+def test_imm_ripples_selector_runs():
+    g = generators.erdos_renyi(64, 5.0, seed=3)
+    res = imm.imm(g, 4, 0.5, jax.random.key(3), max_theta=512,
+                  selector=imm.make_ripples_selector(2))
+    assert len([s for s in res.seeds if s >= 0]) >= 1
+
+
+def test_opim_guarantee_and_rounds():
+    g = generators.preferential_attachment(120, 3, seed=4)
+    res = opim.opim(g, 8, 0.2, jax.random.key(4), theta0=128,
+                    max_theta=2048)
+    assert 0.0 <= res.guarantee <= 1.0
+    assert res.sigma_lower <= res.sigma_upper_opt
+    assert res.rounds >= 1
+    # guarantee improves (or budget caps) over doubling rounds
+    assert res.theta <= 2048
+
+
+def test_opim_with_greediris_selector():
+    g = generators.erdos_renyi(100, 5.0, seed=5)
+    sel = imm.make_randgreedi_selector(4, "streaming", alpha_trunc=0.5)
+    res = opim.opim(g, 4, 0.3, jax.random.key(5), theta0=128,
+                    max_theta=1024, selector=sel,
+                    solver_alpha=theory.greediris_ratio(0.077, 0.0, 0.5))
+    assert res.guarantee >= 0.0
+
+
+def test_theory_values():
+    assert abs(theory.greedy_alpha() - 0.632) < 1e-3
+    assert theory.streaming_beta(0.077) == 0.423
+    # paper §4.2: eps=0.13, delta=0.077 -> ratio ~0.123
+    assert abs(theory.greediris_ratio(0.077, 0.13) - 0.123) < 0.01
+    assert theory.truncated_alpha(1.0) < theory.greedy_alpha() + 1e-9
+    # monotone in alpha
+    assert theory.truncated_alpha(0.5) < theory.truncated_alpha(1.0)
+    assert theory.lambda_star(1000, 10, 0.13, 1.0) > 0
+    assert theory.lambda_prime(1000, 10, 0.13, 1.0) > 0
+    assert theory.ripples_ratio(0.13) > theory.greediris_ratio(0.077, 0.13)

@@ -1,0 +1,83 @@
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitset, maxcover
+
+
+def brute_force_opt(dense: np.ndarray, k: int) -> int:
+    """Exact max-k-cover by enumeration (tiny instances only)."""
+    n = dense.shape[0]
+    best = 0
+    for combo in itertools.combinations(range(n), min(k, n)):
+        best = max(best, int(np.any(dense[list(combo)], axis=0).sum()))
+    return best
+
+
+def test_greedy_matches_lazy_oracle(incidence):
+    X, _ = incidence
+    for k in (1, 4, 16):
+        sol = maxcover.greedy_maxcover(jnp.asarray(X), k)
+        _, lazy_cov = maxcover.lazy_greedy_maxcover_np(X, k)
+        assert int(sol.coverage) == lazy_cov
+
+
+def test_greedy_kernel_path_matches(incidence):
+    X, _ = incidence
+    a = maxcover.greedy_maxcover(jnp.asarray(X), 8, use_kernel=False)
+    b = maxcover.greedy_maxcover(jnp.asarray(X), 8, use_kernel=True)
+    assert int(a.coverage) == int(b.coverage)
+    np.testing.assert_array_equal(np.asarray(a.seeds), np.asarray(b.seeds))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 10), st.integers(8, 40), st.integers(1, 3),
+       st.integers(0, 2**31))
+def test_greedy_approximation_bound(n, theta, k, seed):
+    """Greedy coverage >= (1 - 1/e) * OPT (exact via brute force)."""
+    rng = np.random.default_rng(seed)
+    dense = rng.random((n, theta)) < 0.25
+    rows = bitset.pack_bool_matrix(jnp.asarray(dense))
+    sol = maxcover.greedy_maxcover(rows, k)
+    opt = brute_force_opt(dense, k)
+    assert int(sol.coverage) >= np.floor((1 - 1 / np.e) * opt)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 8), st.integers(8, 32), st.integers(0, 2**31))
+def test_coverage_function_is_submodular(n, theta, seed):
+    """C(A + x) - C(A) >= C(B + x) - C(B) for A subset B."""
+    rng = np.random.default_rng(seed)
+    dense = rng.random((n, theta)) < 0.3
+
+    def cov(subset):
+        if not subset:
+            return 0
+        return int(np.any(dense[list(subset)], axis=0).sum())
+
+    items = list(range(n))
+    a = set(rng.choice(items, size=1).tolist())
+    b = a | set(rng.choice(items, size=2).tolist())
+    x = int(rng.integers(0, n))
+    if x in b:
+        return
+    assert cov(a | {x}) - cov(a) >= cov(b | {x}) - cov(b)
+
+
+def test_greedy_gains_monotone_nonincreasing(incidence):
+    X, _ = incidence
+    sol = maxcover.greedy_maxcover(jnp.asarray(X), 16)
+    gains = np.asarray(sol.gains)
+    picked = gains[np.asarray(sol.seeds) >= 0]
+    assert np.all(np.diff(picked) <= 0)
+
+
+def test_coverage_of_matches_solution(incidence):
+    X, _ = incidence
+    sol = maxcover.greedy_maxcover(jnp.asarray(X), 8)
+    seeds = [int(s) for s in np.asarray(sol.seeds) if s >= 0]
+    assert maxcover.coverage_of(X, seeds) == int(sol.coverage)

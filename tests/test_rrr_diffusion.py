@@ -1,0 +1,79 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitset
+from repro.core.diffusion import influence
+from repro.core.rrr import rrr_batch, sample_incidence_host
+from repro.graphs import generators
+from repro.graphs.csr import from_edge_list, padded_adjacency
+
+
+def test_star_graph_hub_dominates():
+    """Hub->leaf edges with p=1: every RRR set contains the hub."""
+    g = generators.star(50)
+    X, theta = sample_incidence_host(g, 256, jax.random.key(0), model="IC")
+    freq = np.asarray(bitset.coverage_size(X))
+    assert freq[0] == theta                      # hub in every sample
+    assert freq[1:].max() <= theta // 4          # leaves only their own
+
+
+def test_rrr_contains_root():
+    g = generators.erdos_renyi(100, 4.0, seed=0)
+    nbr, prob, wt = padded_adjacency(g)
+    roots = jnp.arange(32)
+    vis = rrr_batch(nbr, prob, wt, roots, jax.random.key(1), model="IC")
+    assert bool(jnp.all(vis[jnp.arange(32), roots]))
+
+
+def test_rrr_reachability_closure():
+    """RRR sets only contain vertices with a directed path to the root."""
+    # chain 0 -> 1 -> 2 (p=1); reverse-reachable(2) = {0,1,2};
+    # reverse-reachable(0) = {0}
+    g = from_edge_list(np.array([0, 1]), np.array([1, 2]), 3,
+                       probs=np.ones(2, dtype=np.float32))
+    nbr, prob, wt = padded_adjacency(g)
+    vis = rrr_batch(nbr, prob, wt, jnp.asarray([2, 0]), jax.random.key(0),
+                    model="IC")
+    np.testing.assert_array_equal(np.asarray(vis[0]), [True, True, True])
+    np.testing.assert_array_equal(np.asarray(vis[1]), [True, False, False])
+
+
+def test_lt_sets_no_larger_than_one_inneighbor_chain():
+    """LT live-edge picks <= 1 in-edge per vertex: RRR set size <= path
+    length bound (no branching)."""
+    g = generators.erdos_renyi(100, 6.0, seed=2)
+    nbr, prob, wt = padded_adjacency(g)
+    vis_lt = rrr_batch(nbr, prob, wt, jnp.arange(64), jax.random.key(3),
+                       model="LT", max_steps=16)
+    sizes = np.asarray(vis_lt).sum(axis=1)
+    assert sizes.max() <= 17   # root + one per step (chain, no tree)
+
+
+def test_rrr_frequency_tracks_influence():
+    """RIS theory: P(v in RRR) = sigma({v}) / n.  The top-frequency
+    vertices should have at least the MC influence of the bottom ones
+    (tolerance for MC noise on small spreads)."""
+    g = generators.preferential_attachment(120, 3, seed=4)
+    X, theta = sample_incidence_host(g, 2048, jax.random.key(4),
+                                     model="IC")
+    freq = np.asarray(bitset.coverage_size(X))
+    order = np.argsort(freq)
+    key = jax.random.key(5)
+    inf_top = float(influence(g, order[-5:].copy(), key, num_sims=96))
+    inf_low = float(influence(g, order[:5].copy(), key, num_sims=96))
+    assert inf_top >= 0.9 * inf_low
+
+
+def test_influence_bounds():
+    g = generators.erdos_renyi(80, 5.0, seed=6)
+    s = float(influence(g, np.array([0, 1, 2]), jax.random.key(0),
+                        num_sims=16))
+    assert 3.0 <= s <= 80.0
+
+
+def test_lt_influence_runs():
+    g = generators.erdos_renyi(60, 5.0, seed=7)
+    s = float(influence(g, np.array([0]), jax.random.key(1), model="LT",
+                        num_sims=16))
+    assert 1.0 <= s <= 60.0

@@ -1,0 +1,76 @@
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import bitset, maxcover, streaming
+from tests.test_maxcover import brute_force_opt
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(5, 12), st.integers(16, 48), st.integers(1, 3),
+       st.integers(0, 2**31))
+def test_streaming_guarantee_vs_opt(n, theta, k, seed):
+    """McGregor-Vu: coverage >= (1/2 - delta) * OPT."""
+    delta = 0.077
+    rng = np.random.default_rng(seed)
+    dense = rng.random((n, theta)) < 0.3
+    rows = bitset.pack_bool_matrix(jnp.asarray(dense))
+    lower = float(np.max(dense.sum(axis=1)))
+    if lower == 0:
+        return
+    ids = jnp.arange(n, dtype=jnp.int32)
+    _, cov, _ = streaming.streaming_maxcover(ids, rows, k, delta,
+                                             jnp.float32(lower))
+    opt = brute_force_opt(dense, k)
+    assert int(cov) >= np.floor((0.5 - delta) * opt)
+
+
+def test_num_buckets_formula():
+    # paper: B = ceil(log_{1+delta}(u/l)) with u/l = k; their settings
+    # (k=100, delta=0.077) give ~63 buckets = their thread count.
+    assert 60 <= streaming.num_buckets(100, 0.077) <= 64
+    assert streaming.num_buckets(1000, 0.0562) in range(120, 130)
+
+
+def test_incremental_chunks_equal_one_shot(incidence):
+    X, _ = incidence
+    rows = jnp.asarray(X[:64])
+    ids = jnp.arange(64, dtype=jnp.int32)
+    k, delta = 8, 0.077
+    lower = jnp.float32(float(np.max(
+        np.asarray(jax.lax.population_count(rows).sum(axis=1)))))
+    _, cov_a, state_a = streaming.streaming_maxcover(ids, rows, k, delta,
+                                                     lower)
+    state = streaming.init_state(k, delta, lower, rows.shape[1])
+    for i in range(0, 64, 16):
+        state = streaming.insert_chunk(state, ids[i:i+16], rows[i:i+16], k)
+    _, cov_b = streaming.finalize(state)
+    assert int(cov_a) == int(cov_b)
+    np.testing.assert_array_equal(np.asarray(state_a.counts),
+                                  np.asarray(state.counts))
+
+
+def test_bucket_capacity_respected(incidence):
+    X, _ = incidence
+    k = 4
+    rows = jnp.asarray(X[:100])
+    ids = jnp.arange(100, dtype=jnp.int32)
+    _, _, state = streaming.streaming_maxcover(ids, rows, k, 0.077,
+                                               jnp.float32(50.0))
+    assert int(jnp.max(state.counts)) <= k
+
+
+def test_streaming_kernel_path(incidence):
+    X, _ = incidence
+    rows = jnp.asarray(X[:64])
+    ids = jnp.arange(64, dtype=jnp.int32)
+    _, cov_a, _ = streaming.streaming_maxcover(ids, rows, 8, 0.077,
+                                               jnp.float32(40.0))
+    _, cov_b, _ = streaming.streaming_maxcover(ids, rows, 8, 0.077,
+                                               jnp.float32(40.0),
+                                               use_kernel=True)
+    assert int(cov_a) == int(cov_b)

@@ -1,0 +1,48 @@
+"""End-to-end behaviour tests for the paper's system."""
+import jax
+import numpy as np
+
+from repro.core import imm, theory
+from repro.core.diffusion import influence
+from repro.graphs import generators
+
+
+def test_end_to_end_im_quality():
+    """Full IMM + GreediRIS pipeline finds seeds whose MC influence is
+    close to sequential-greedy IMM on the same graph — the paper's
+    headline quality claim (geometric-mean gap 2.72% at m=512; we
+    assert a generous 25% on a tiny CPU instance)."""
+    g = generators.preferential_attachment(200, 3, seed=0)
+    key = jax.random.key(0)
+    base = imm.imm(g, 8, 0.3, key, max_theta=2048)
+    ours = imm.imm(g, 8, 0.3, key, max_theta=2048,
+                   selector=imm.make_randgreedi_selector(
+                       4, "streaming", 0.077, alpha_trunc=0.5))
+    i_base = float(influence(g, base.seeds, key, num_sims=48))
+    i_ours = float(influence(
+        g, np.asarray([s for s in ours.seeds if s >= 0]), key,
+        num_sims=48))
+    assert i_ours >= 0.75 * i_base, (i_ours, i_base)
+
+
+def test_worst_case_ratio_ordering():
+    """Ripples > GreediRIS > GreediRIS-trunc in worst-case guarantees;
+    quality in practice is comparable (asserted above)."""
+    eps = 0.13
+    r = theory.ripples_ratio(eps)
+    g = theory.greediris_ratio(0.077, eps)
+    t = theory.greediris_ratio(0.077, eps, alpha_trunc=0.125)
+    assert r > g > t
+    assert g > 0
+    # aggressive truncation (alpha=0.125) makes the worst-case bound
+    # vacuous at eps=0.13 -- the paper's quality argument there is
+    # empirical (<=0.36% observed loss), which test_end_to_end_im_quality
+    # checks in miniature.
+    assert t < 0.05
+
+
+def test_im_driver_cli_smoke():
+    from repro.launch import im_driver
+    rc = im_driver.main(["--n", "200", "--k", "4", "--max-theta", "512",
+                         "--selector", "greediris", "--eval-sims", "8"])
+    assert rc == 0

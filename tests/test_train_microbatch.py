@@ -1,0 +1,60 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as model_lib
+from repro.optim.adamw import OptConfig
+
+
+def test_microbatch_equals_full_batch_grads():
+    """Gradient accumulation over 2 microbatches == single batch."""
+    cfg = get_config("gemma-7b", smoke=True)
+    opt = OptConfig(warmup_steps=1, total_steps=4, lr=1e-3)
+    bundle = model_lib.build(cfg, opt, sharded=False)
+    key = jax.random.key(0)
+    state, _ = bundle.init_state(key)
+    batch = {"tokens": jax.random.randint(key, (4, 17), 0,
+                                          cfg.vocab_size)}
+    s1, m1 = jax.jit(bundle.train_step(microbatches=1))(state, batch)
+    s2, m2 = jax.jit(bundle.train_step(microbatches=2))(state, batch)
+    a = np.asarray(jax.tree.leaves(s1.params)[0], dtype=np.float32)
+    b = np.asarray(jax.tree.leaves(s2.params)[0], dtype=np.float32)
+    np.testing.assert_allclose(a, b, rtol=0.05, atol=1e-3)
+
+
+def test_hlo_analysis_parser():
+    from repro.distributed import hlo_analysis as hlo
+    text = """
+  %all-gather.8 = f32[3072,16000]{1,0} all-gather(%x), channel_id=30, replica_groups=[16,16]<=[16,16]T(1,0), dimensions={0}
+  %all-reduce.4 = bf16[16,256]{1,0} all-reduce(%dot.5), channel_id=3, replica_groups=[4,64]<=[256], use_global_device_ids=true
+  %nothing = f32[4]{0} add(%a, %b)
+"""
+    stats = hlo.parse_collectives(text)
+    assert stats.count == 2
+    ag = 3072 * 16000 * 4 * 15 / 16
+    ar = 2 * 16 * 256 * 2 * 63 / 64
+    assert abs(stats.bytes_by_op["all-gather"] - ag) < 1
+    assert abs(stats.bytes_by_op["all-reduce"] - ar) < 1
+
+
+def test_roofline_terms():
+    from repro.distributed import hlo_analysis as hlo
+    t = hlo.roofline(197e12, 819e9, 200e9)
+    assert abs(t.compute_s - 1.0) < 1e-6
+    assert abs(t.memory_s - 1.0) < 1e-6
+    assert t.dominant in ("compute", "memory", "collective")
+
+
+def test_memory_model_scales():
+    from repro.configs import get_config
+    from repro.configs.shapes import SHAPES
+    from repro.distributed import memory_model as mm
+    cfg = get_config("gemma-7b")
+    t1 = mm.hbm_traffic(cfg, SHAPES["train_4k"], n_dev=256, dp=16, tp=16)
+    t2 = mm.hbm_traffic(cfg, SHAPES["train_4k"], n_dev=512, dp=32, tp=16)
+    assert t2 < t1                       # more dp -> fewer tokens/dev
+    d1 = mm.hbm_traffic(cfg, SHAPES["decode_32k"], n_dev=256, dp=16,
+                        tp=16)
+    assert d1 < t1                       # decode step << train step
+    assert mm.model_flops(cfg, SHAPES["train_4k"]) > 0
