@@ -19,8 +19,8 @@ from repro.core import greediris
 g = generators.erdos_renyi(2000, 6.0, seed=1)
 nbr, prob, wt = padded_adjacency(g)
 key = jax.random.key(0)
-mesh = jax.make_mesh((8,), ("machines",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.runtime.jaxcompat import make_mesh
+mesh = make_mesh((8,), ("machines",))
 res = {}
 for name, kw in (
     ("dense-gather", dict(shuffle="dense")),

@@ -40,6 +40,37 @@ def main():
     emit("kernels/bucket_ref_cpu/B=63,w=2048", t * 1e6,
          f"tpu_roofline_target_us={63*2048*4/HBM_BW*1e6:.2f}")
 
+    # --- streaming receiver: per-candidate scan vs fused chunk ---
+    # scan path: one bucket-gain pass + a [B, W] covers round-trip per
+    # candidate -> C * (2*B*W + W) words of HBM traffic per chunk.
+    # fused path: covers VMEM-resident across the in-kernel candidate
+    # loop -> (2*B*W + C*W) words, one launch.  CPU wall times below
+    # (fused runs interpret-emulated); the roofline columns carry the
+    # HBM-traffic model the kernel targets on TPU.
+    from repro.core import streaming
+    k, delta, w, c = 32, 0.077, 512, 128
+    b = streaming.num_buckets(k, delta)
+    rows_c = jnp.asarray(rng.integers(0, 2**32, (c, w), dtype=np.uint32))
+    ids_c = jnp.arange(c, dtype=jnp.int32)
+    state = streaming.init_state(k, delta, 64.0, w)
+    t_scan = timeit(
+        lambda s, i, r: streaming.insert_chunk(s, i, r, k=k,
+                                               use_kernel=False),
+        state, ids_c, rows_c)
+    t_fused = timeit(
+        lambda s, i, r: streaming.insert_chunk(s, i, r, k=k,
+                                               use_kernel=True),
+        state, ids_c, rows_c)
+    scan_bytes = c * (2 * b * w + w) * 4
+    fused_bytes = (2 * b * w + c * w) * 4
+    emit(f"streaming/receiver_scan/B={b},w={w},C={c}", t_scan * 1e6,
+         f"tpu_roofline_target_us={scan_bytes/HBM_BW*1e6:.2f} "
+         f"launches={c}")
+    emit(f"streaming/receiver_fused/B={b},w={w},C={c}", t_fused * 1e6,
+         f"tpu_roofline_target_us={fused_bytes/HBM_BW*1e6:.2f} "
+         f"launches=1 hbm_traffic_ratio={scan_bytes/fused_bytes:.1f}x "
+         f"cpu_mode=interpret-emulation")
+
 
 if __name__ == "__main__":
     main()

@@ -22,8 +22,8 @@ from repro.core.diffusion import influence
 g = generators.{gen}
 nbr, prob, wt = padded_adjacency(g)
 key = jax.random.key(0)
-mesh = jax.make_mesh((8,), ("machines",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.runtime.jaxcompat import make_mesh
+mesh = make_mesh((8,), ("machines",))
 n = g.num_vertices
 res = {{}}
 for name, kind, alpha in (("greediris", "g", 1.0),

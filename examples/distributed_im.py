@@ -31,8 +31,8 @@ from repro.graphs.csr import padded_adjacency
 g = generators.erdos_renyi(2000, 8.0, seed=1)
 nbr, prob, wt = padded_adjacency(g)
 key = jax.random.key(0)
-mesh = jax.make_mesh((8,), ("machines",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.runtime.jaxcompat import make_mesh
+mesh = make_mesh((8,), ("machines",))
 print(f"mesh: {mesh.shape} | graph n={g.num_vertices} m={g.num_edges}")
 
 for label, builder in (

@@ -54,18 +54,38 @@ def _axis_size(mesh, axes: Sequence[str]) -> int:
     return int(math.prod(mesh.shape[a] for a in axes))
 
 
+def _shard_map(f, mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions: top-level (>= 0.6, kwarg
+    check_vma) with fallback to jax.experimental.shard_map (0.4.x,
+    kwarg check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
                 max_degree: int, model: str = "IC", delta: float = 0.077,
                 alpha_trunc: float = 1.0, aggregate: str = "gather",
                 max_steps: int = 32, sample_chunks: int = 1,
                 use_kernel: bool = False, shuffle: str = "dense",
-                est_rrr_len: float = 16.0):
+                est_rrr_len: float = 16.0,
+                chunk_size: int | None = None):
     """Build the jittable distributed round fn(nbr, prob, wt, key).
 
     The graph (padded reverse adjacency [n_pad, d]) is replicated on
     every device — the paper's setup ("the input graph is loaded on all
     machines").  Returns a function suitable for jax.jit with the given
     mesh, and the padded vertex count.
+
+    chunk_size: receiver insertion granularity under "gather": the
+    [m*kk] gathered stream is split into ceil(m*kk / chunk_size)
+    chunks, each inserted with one fused-kernel launch (None = whole
+    stream in one chunk).  Ignored under "pipeline", whose chunk is
+    inherently the kk-seed ring payload (the ppermute of chunk r+1
+    overlaps the fused insertion of chunk r).
 
     shuffle:
       "dense"  — all_to_all of the packed incidence bitmatrix (paper-
@@ -80,6 +100,10 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
                  buckets (x2 safety); overflow pairs are dropped and
                  counted (quality effect = slightly smaller theta).
     """
+    if chunk_size is not None and chunk_size <= 0:
+        raise ValueError(
+            f"chunk_size must be a positive candidate count or None "
+            f"(whole stream), got {chunk_size}")
     axes = tuple(axes)
     m = _axis_size(mesh, axes)
     n_pad = ((n + m - 1) // m) * m
@@ -189,10 +213,36 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
         if aggregate == "gather":
             ids_all = lax.all_gather(sent_ids, axes, tiled=True)   # [m*kk]
             rows_all = lax.all_gather(sent_rows, axes, tiled=True)
-            state = streaming.insert_chunk(state, ids_all, rows_all, k,
-                                           use_kernel)
-        else:  # pipeline: m-step ring; permute of the next chunk
-            # overlaps insertion of the current one.
+            total = m * kk
+            if chunk_size and chunk_size < total:
+                # Chunked insertion: one fused-kernel launch per
+                # chunk_size candidates.  Pad with id -1 (rejected
+                # unconditionally, zero rows) to a whole number of
+                # chunks — exactness is preserved.
+                pad = (-total) % chunk_size
+                if pad:
+                    ids_all = jnp.concatenate(
+                        [ids_all, jnp.full((pad,), -1, jnp.int32)])
+                    rows_all = jnp.concatenate(
+                        [rows_all,
+                         jnp.zeros((pad, rows_all.shape[1]),
+                                   rows_all.dtype)])
+                nch = (total + pad) // chunk_size
+                ids_ch = ids_all.reshape(nch, chunk_size)
+                rows_ch = rows_all.reshape(nch, chunk_size, -1)
+
+                def chunk_body(st, x):
+                    ci, cr = x
+                    return streaming.insert_chunk(st, ci, cr, k,
+                                                  use_kernel), None
+
+                state, _ = lax.scan(chunk_body, state, (ids_ch, rows_ch))
+            else:
+                state = streaming.insert_chunk(state, ids_all, rows_all,
+                                               k, use_kernel)
+        else:  # pipeline: m-step ring; the ppermute of chunk r+1
+            # overlaps the (fused, one-launch when use_kernel) bucket
+            # insertion of chunk r.
             pairs = [(j, (j + 1) % m) for j in range(m)]
 
             def ring(carry, _):
@@ -226,8 +276,7 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
 
     specs_in = (P(), P(), P(), P())  # graph + key replicated
     specs_out = GreediRISOut(P(), P(), P(), P())
-    fn = jax.shard_map(shard_fn, mesh=mesh, in_specs=specs_in,
-                       out_specs=specs_out, check_vma=False)
+    fn = _shard_map(shard_fn, mesh, specs_in, specs_out)
     return fn, n_pad, theta_local * m
 
 
@@ -298,6 +347,5 @@ def build_ripples_round(mesh, axes: Sequence[str], *, n: int, theta: int,
         cov = lax.psum(bitset.coverage_size(covered), axes)
         return seeds, cov
 
-    fn = jax.shard_map(shard_fn, mesh=mesh, in_specs=(P(), P(), P(), P()),
-                       out_specs=(P(), P()), check_vma=False)
+    fn = _shard_map(shard_fn, mesh, (P(), P(), P(), P()), (P(), P()))
     return fn, theta_local * m

@@ -38,7 +38,8 @@ def greedy_selector(rows, k, key):
 
 def make_randgreedi_selector(m: int, aggregator: str = "streaming",
                              delta: float = 0.077,
-                             alpha_trunc: float = 1.0) -> Selector:
+                             alpha_trunc: float = 1.0,
+                             use_kernel: bool = False) -> Selector:
     def sel(rows, k, key):
         n = rows.shape[0]
         pad = (-n) % m
@@ -46,7 +47,7 @@ def make_randgreedi_selector(m: int, aggregator: str = "streaming",
             rows = jnp.pad(rows, ((0, pad), (0, 0)))
         res = randgreedi.randgreedi_maxcover(
             rows, key, m=m, k=k, aggregator=aggregator, delta=delta,
-            alpha_trunc=alpha_trunc)
+            alpha_trunc=alpha_trunc, use_kernel=use_kernel)
         seeds = jnp.where(res.seeds < n, res.seeds, -1)
         return seeds, res.coverage
     return sel

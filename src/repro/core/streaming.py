@@ -8,6 +8,20 @@ independent -> the paper parallelizes them over 63 OpenMP threads; we
 instead make B a leading vector axis so one candidate updates all
 buckets in a single fused popcount/compare/select (VPU data parallel).
 
+Two receiver implementations share the same arrival-order semantics:
+
+  * ``use_kernel=False`` — reference ``lax.scan`` over candidates,
+    one ``_insert_one`` step each (the legacy path, kept as the
+    oracle and CPU fallback);
+  * ``use_kernel=True`` — the fused chunk-resident Pallas kernel
+    (``repro.kernels.bucket_insert``): one pallas_call per chunk with
+    the [B, W] bucket covers resident in VMEM across the in-kernel
+    candidate loop, so gains, the accept decision, the cover
+    OR-update, and the seed-slot write are fused per candidate instead
+    of launching one ``bucket_gains`` kernel per candidate and
+    round-tripping the covers through HBM every step.  The two paths
+    produce bit-identical ``StreamState``.
+
 The incremental ``insert_chunk`` API is what the distributed pipeline
 uses to interleave bucket updates with the gather of the next chunk of
 remote seeds (the SPMD analogue of the paper's nonblocking streaming).
@@ -48,18 +62,19 @@ def init_state(k: int, delta: float, lower: float, num_words: int,
     )
 
 
-def _insert_one(state: StreamState, seed_id, row, k: int,
-                use_kernel: bool = False) -> StreamState:
+def _insert_one(state: StreamState, seed_id, row, k: int) -> StreamState:
+    """One arrival-order insertion step (the scan-path reference)."""
     covers, counts, seeds, thr = state
-    if use_kernel:
-        from repro.kernels import ops as kops
-        gains = kops.bucket_gains(row, covers)
-    else:
-        gains = jnp.sum(bitset.popcount(row[None, :] & ~covers), axis=-1)
+    gains = jnp.sum(bitset.popcount(row[None, :] & ~covers), axis=-1)
     valid = seed_id >= 0
     accept = valid & (counts < k) & (gains.astype(jnp.float32) >= thr)
     covers = jnp.where(accept[:, None], covers | row[None, :], covers)
     b = counts.shape[0]
+    # The write slot clip(counts, 0, k-1) is only reached when accept
+    # is true, and accept requires counts < k — so a full bucket's
+    # last slot is never silently overwritten (invariant pinned by
+    # tests/test_streaming.py::test_full_bucket_seed_slots_untouched
+    # and the counts <= k assertion in ``finalize``).
     slot = jnp.clip(counts, 0, k - 1)
     new_seed = jnp.where(
         accept, seed_id,
@@ -74,18 +89,46 @@ def insert_chunk(state: StreamState, seed_ids: jnp.ndarray,
                  rows: jnp.ndarray, k: int,
                  use_kernel: bool = False) -> StreamState:
     """Stream a chunk of candidates (ids [c], rows [c, W]) through all
-    buckets in arrival order."""
+    buckets in arrival order.
+
+    ``use_kernel=True`` routes the whole chunk through the fused
+    chunk-resident Pallas kernel (O(1) launches, covers stay in VMEM);
+    ``use_kernel=False`` keeps the legacy per-candidate ``lax.scan``.
+    Both produce bit-identical state.
+    """
+    if k != state.seeds.shape[1]:
+        raise ValueError(
+            f"k={k} does not match the state's bucket capacity "
+            f"{state.seeds.shape[1]} (seeds.shape[1]); the kernel path "
+            f"derives capacity from the state, so a mismatch would make "
+            f"the two receiver paths diverge")
+    if use_kernel:
+        from repro.kernels import ops as kops
+        covers, counts, seeds = kops.bucket_insert_chunk(
+            seed_ids, rows, state.covers, state.counts, state.seeds,
+            state.thresholds)
+        return StreamState(covers, counts, seeds, state.thresholds)
 
     def body(st, x):
         sid, row = x
-        return _insert_one(st, sid, row, k, use_kernel), None
+        return _insert_one(st, sid, row, k), None
 
     state, _ = jax.lax.scan(body, state, (seed_ids, rows))
     return state
 
 
 def finalize(state: StreamState):
-    """Return (seeds [k], coverage) of the best bucket b*."""
+    """Return (seeds [k], coverage) of the best (argmax-cover) bucket.
+
+    Checks the bucket-capacity invariant counts <= k when called on
+    concrete (non-traced) state — a bucket with more admissions than
+    seed slots would mean an accepted candidate overwrote a slot.
+    """
+    k = state.seeds.shape[1]
+    if not isinstance(state.counts, jax.core.Tracer):
+        assert int(jnp.max(state.counts)) <= k, (
+            f"bucket overfilled: max count {int(jnp.max(state.counts))} "
+            f"> capacity k={k}")
     per_bucket = bitset.coverage_size(state.covers)  # [B]
     best = jnp.argmax(per_bucket)
     return state.seeds[best], per_bucket[best]

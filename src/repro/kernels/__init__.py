@@ -1,8 +1,12 @@
 """Pallas TPU kernels for the GreediRIS compute hot spots.
 
-coverage.py  fused AND-NOT + popcount marginal-gain sweep
-bucket.py    streaming bucket-insertion gain pass (Algorithm 5)
-topk_gain.py fused gain + blockwise argmax (greedy inner loop)
+coverage.py       fused AND-NOT + popcount marginal-gain sweep
+bucket.py         per-candidate bucket-insertion gain pass (Algorithm 5)
+bucket_insert.py  fused chunked receiver: a whole candidate chunk
+                  streamed through all buckets in one pallas_call with
+                  the bucket covers VMEM-resident (gains + accept +
+                  cover OR-update + seed-slot write fused)
+topk_gain.py      fused gain + blockwise argmax (greedy inner loop)
 
 Each kernel ships with ref.py (pure-jnp oracle) and ops.py (backend-
 aware jit wrappers).  Validated under interpret=True on CPU; compiled

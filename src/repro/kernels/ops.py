@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.bucket import bucket_gains_pallas
+from repro.kernels.bucket_insert import bucket_insert_chunk_pallas
 from repro.kernels.coverage import marginal_gain_pallas
 from repro.kernels.topk_gain import best_gain_index_pallas
 
@@ -32,3 +33,14 @@ def best_gain_index(rows: jnp.ndarray, covered: jnp.ndarray,
                     picked: jnp.ndarray):
     return best_gain_index_pallas(rows, covered, picked,
                                   interpret=_interpret())
+
+
+def bucket_insert_chunk(seed_ids: jnp.ndarray, rows: jnp.ndarray,
+                        covers: jnp.ndarray, counts: jnp.ndarray,
+                        seeds: jnp.ndarray, thresholds: jnp.ndarray):
+    """Fused streaming-receiver insertion of a whole candidate chunk:
+    one pallas_call with the bucket covers VMEM-resident, replacing the
+    per-candidate ``bucket_gains`` launch + HBM round-trip."""
+    return bucket_insert_chunk_pallas(seed_ids, rows, covers, counts,
+                                      seeds, thresholds,
+                                      interpret=_interpret())

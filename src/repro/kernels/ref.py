@@ -26,3 +26,33 @@ def best_gain_index_ref(rows: jnp.ndarray, covered: jnp.ndarray,
     gains = jnp.where(picked, -1, gains)
     best = jnp.argmax(gains)
     return gains[best], best.astype(jnp.int32)
+
+
+def bucket_insert_chunk_ref(seed_ids: jnp.ndarray, rows: jnp.ndarray,
+                            covers: jnp.ndarray, counts: jnp.ndarray,
+                            seeds: jnp.ndarray, thresholds: jnp.ndarray):
+    """Arrival-order fold of the Algorithm-5 bucket insertion over a
+    chunk: the oracle for ``bucket_insert_chunk_pallas``.
+
+    Returns (covers, counts, seeds) updated.
+    """
+    k = seeds.shape[1]
+    b = counts.shape[0]
+
+    def body(state, x):
+        covers, counts, seeds = state
+        sid, row = x
+        gains = bucket_gains_ref(row, covers)
+        accept = ((sid >= 0) & (counts < k)
+                  & (gains.astype(jnp.float32) >= thresholds))
+        covers = jnp.where(accept[:, None], covers | row[None, :], covers)
+        slot = jnp.clip(counts, 0, k - 1)
+        new_seed = jnp.where(accept, sid, seeds[jnp.arange(b), slot])
+        seeds = seeds.at[jnp.arange(b), slot].set(new_seed)
+        counts = counts + accept.astype(jnp.int32)
+        return (covers, counts, seeds), None
+
+    (covers, counts, seeds), _ = jax.lax.scan(
+        body, (covers, counts, seeds),
+        (seed_ids.astype(jnp.int32), rows))
+    return covers, counts, seeds

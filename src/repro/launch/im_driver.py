@@ -54,6 +54,11 @@ def main(argv=None):
     ap.add_argument("--theta", type=int, default=0,
                     help="fixed theta (skip martingale loop)")
     ap.add_argument("--use-opim", action="store_true")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route the receiver through the fused "
+                         "chunk-insertion Pallas kernel")
+    ap.add_argument("--chunk-size", type=int, default=0,
+                    help="receiver insertion chunk (0 = whole stream)")
     ap.add_argument("--eval-sims", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -74,7 +79,9 @@ def main(argv=None):
         fn, _, theta = greediris.build_round(
             mesh, ("machines",), n=n, theta=args.theta, k=args.k,
             max_degree=g.max_in_degree(), model=args.model,
-            delta=args.delta, alpha_trunc=alpha, aggregate=args.aggregate)
+            delta=args.delta, alpha_trunc=alpha, aggregate=args.aggregate,
+            use_kernel=args.use_kernel,
+            chunk_size=args.chunk_size or None)
         out = jax.jit(fn)(nbr, prob, wt, key)
         seeds = np.asarray(out.seeds)
         print(f"[im] m={m} theta={theta} coverage={int(out.coverage)} "
@@ -87,9 +94,11 @@ def main(argv=None):
             "ripples": imm.make_ripples_selector(m),
             "randgreedi": imm.make_randgreedi_selector(m, "greedy"),
             "greediris": imm.make_randgreedi_selector(
-                m, "streaming", args.delta),
+                m, "streaming", args.delta,
+                use_kernel=args.use_kernel),
             "greediris-trunc": imm.make_randgreedi_selector(
-                m, "streaming", args.delta, args.alpha),
+                m, "streaming", args.delta, args.alpha,
+                use_kernel=args.use_kernel),
         }[args.selector]
         if args.use_opim:
             res = opim.opim(g, args.k, args.eps, key, model=args.model,

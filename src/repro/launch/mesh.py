@@ -1,18 +1,20 @@
 """Production mesh builders (TPU v5e pods; CPU placeholder devices for
 the dry-run).  Functions, not module constants, so importing never
-touches jax device state."""
+touches jax device state.  Mesh construction goes through
+``repro.runtime.jaxcompat`` so the same code runs on jax versions with
+and without ``AxisType`` / ``set_mesh``."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.runtime.jaxcompat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_im_mesh(num_machines: int, *, multi_pod: bool = False):
@@ -21,14 +23,11 @@ def make_im_mesh(num_machines: int, *, multi_pod: bool = False):
     multi_pod the same chips are named ('pod', 'machines') so the
     all_to_all/gather spans both axes explicitly."""
     if multi_pod:
-        return jax.make_mesh((2, num_machines // 2), ("pod", "machines"),
-                             axis_types=(AxisType.Auto,) * 2)
-    return jax.make_mesh((num_machines,), ("machines",),
-                         axis_types=(AxisType.Auto,))
+        return make_mesh((2, num_machines // 2), ("pod", "machines"))
+    return make_mesh((num_machines,), ("machines",))
 
 
 def make_host_mesh():
     """Whatever devices exist right now, as a 1-D mesh (CPU tests)."""
     n = len(jax.devices())
-    return jax.make_mesh((n,), ("machines",),
-                         axis_types=(AxisType.Auto,))
+    return make_mesh((n,), ("machines",))

@@ -1,0 +1,42 @@
+"""Version-compat shims over the jax mesh / sharding APIs.
+
+The repo targets the modern sharding-in-types surface (``jax.make_mesh``
+with ``axis_types``, ``jax.set_mesh``); the pinned CI container ships
+jax 0.4.x where ``jax.sharding.AxisType`` does not exist, ``make_mesh``
+takes no ``axis_types``, and the ambient mesh is set with the
+``with mesh:`` context instead of ``jax.set_mesh``.  Routing every mesh
+construction through this module keeps the library importable and the
+tier-1 suite green on both.
+"""
+from __future__ import annotations
+
+import jax
+
+HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+
+
+def auto_axis_types(num_axes: int):
+    """(AxisType.Auto,) * num_axes on new jax, None on old."""
+    if HAS_AXIS_TYPES:
+        return (jax.sharding.AxisType.Auto,) * num_axes
+    return None
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """jax.make_mesh that tolerates jax versions without axis_types."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if HAS_AXIS_TYPES:
+        kwargs["axis_types"] = (axis_types
+                                or auto_axis_types(len(axis_names)))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh:
+    ``jax.set_mesh`` on new jax, the ``with mesh:`` resource-env
+    context on 0.4.x (Mesh has always been a context manager there)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh

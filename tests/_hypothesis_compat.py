@@ -1,0 +1,121 @@
+"""Dependency-free stand-in for the subset of ``hypothesis`` this test
+suite uses (``given``, ``settings``, ``strategies.integers``).
+
+The CI container has no network, so ``pip install hypothesis`` is not
+an option; without this shim every property-based module dies at
+collection time with ``ModuleNotFoundError`` and pytest aborts the
+whole run.  ``install()`` (called from ``conftest.py`` when the real
+package is absent) registers this module under
+``sys.modules['hypothesis']`` so ``from hypothesis import given`` in
+the test files resolves to the shim transparently.
+
+Semantics: ``@given(s1, ..., sn)`` turns the test into a loop over
+``max_examples`` examples (from the paired ``@settings``, default
+{DEFAULT}), each drawn from the strategies with a ``numpy`` RNG seeded
+from the test's qualified name — deterministic across runs and
+machines, no shrinking, no example database.  Arguments supplied by
+pytest (fixtures / parametrize) stay in the wrapper's signature and
+are passed through; drawn values are appended after them, matching
+hypothesis' argument order for positional strategies.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A strategy is just a draw function rng -> value."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    """Uniform integers on the inclusive range [min_value, max_value]."""
+    return _Strategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Records max_examples on the decorated (given-wrapped) test."""
+
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies):
+    """Run the test body over N deterministic pseudo-random examples."""
+
+    def deco(fn):
+        params = list(inspect.signature(fn).parameters.values())
+        keep = params[:len(params) - len(strategies)]
+        drawn_names = [p.name for p in params[len(params)
+                                              - len(strategies):]]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples",
+                        getattr(fn, "_shim_max_examples",
+                                DEFAULT_MAX_EXAMPLES))
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                # Bind drawn values to the trailing parameters by name:
+                # pytest passes fixtures/parametrize args as keywords,
+                # so positional splicing would collide with them.
+                drawn = {name: s.example(rng)
+                         for name, s in zip(drawn_names, strategies)}
+                fn(*args, **kwargs, **drawn)
+
+        # Hide the strategy-supplied trailing parameters from pytest so
+        # it does not look for fixtures named after them; leading
+        # params (fixtures / parametrize) remain visible.
+        wrapper.__signature__ = inspect.Signature(keep)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+__doc__ = __doc__.replace("{DEFAULT}", str(DEFAULT_MAX_EXAMPLES))
+
+
+def install():
+    """Register the shim as ``hypothesis`` / ``hypothesis.strategies``."""
+    if "hypothesis" in sys.modules:      # real package (or us) already in
+        return
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strat = types.ModuleType("hypothesis.strategies")
+    strat.integers = integers
+    strat.sampled_from = sampled_from
+    strat.booleans = booleans
+    mod.strategies = strat
+    mod.__is_shim__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strat

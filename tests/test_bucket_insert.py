@@ -1,0 +1,120 @@
+"""Parity + state-equivalence tests for the fused chunked
+streaming-receiver kernel (``bucket_insert_chunk_pallas``)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitset, streaming
+from repro.kernels import ref
+from repro.kernels.bucket_insert import bucket_insert_chunk_pallas
+
+# (B, W, C, k) — W deliberately includes non-tile-aligned word counts.
+SHAPES = [
+    (1, 1, 1, 1),
+    (8, 16, 12, 4),
+    (16, 7, 5, 2),
+    (47, 33, 20, 8),
+    (63, 100, 30, 4),
+    (64, 128, 40, 8),
+]
+
+
+def _random_problem(b, w, c, k, seed):
+    rng = np.random.default_rng(seed)
+    rows = jnp.asarray(rng.integers(0, 2**32, (c, w), dtype=np.uint32))
+    # some invalid ids (-1) interleaved: padding must be a no-op
+    ids = jnp.asarray(
+        np.where(rng.random(c) < 0.2, -1,
+                 rng.integers(0, 10_000, c)).astype(np.int32))
+    covers = jnp.asarray(rng.integers(0, 2**32, (b, w), dtype=np.uint32))
+    counts = jnp.asarray(rng.integers(0, k + 1, b, dtype=np.int32))
+    seeds = jnp.asarray(rng.integers(-1, 10_000, (b, k), dtype=np.int32))
+    # thresholds spanning reject-all .. accept-all
+    thr = jnp.asarray(
+        (rng.random(b) * 40.0 * w).astype(np.float32))
+    return ids, rows, covers, counts, seeds, thr
+
+
+def _assert_state_equal(got, want):
+    for g, e, name in zip(got, want, ("covers", "counts", "seeds")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(e),
+                                      err_msg=f"{name} mismatch")
+
+
+@pytest.mark.parametrize("b,w,c,k", SHAPES)
+def test_fused_matches_ref_oracle(b, w, c, k):
+    ids, rows, covers, counts, seeds, thr = _random_problem(
+        b, w, c, k, seed=b * 1_000_003 + w * 101 + c)
+    got = bucket_insert_chunk_pallas(ids, rows, covers, counts, seeds,
+                                     thr, interpret=True)
+    want = ref.bucket_insert_chunk_ref(ids, rows, covers, counts, seeds,
+                                       thr)
+    _assert_state_equal(got, (want[0], want[1], want[2]))
+
+
+@pytest.mark.parametrize("b,w,c,k", SHAPES)
+def test_fused_matches_legacy_scan(b, w, c, k):
+    ids, rows, covers, counts, seeds, thr = _random_problem(
+        b, w, c, k, seed=b * 7 + w * 13 + c * 17 + k)
+    state = streaming.StreamState(covers, counts, seeds, thr)
+    want = streaming.insert_chunk(state, ids, rows, k, use_kernel=False)
+    gc, gn, gs = bucket_insert_chunk_pallas(ids, rows, covers, counts,
+                                            seeds, thr, interpret=True)
+    _assert_state_equal((gc, gn, gs),
+                        (want.covers, want.counts, want.seeds))
+
+
+@pytest.mark.parametrize("block_w", [128, 256, 512])
+def test_fused_block_w_tiling(block_w):
+    """Word-axis tiling must not change results on non-aligned W."""
+    ids, rows, covers, counts, seeds, thr = _random_problem(
+        33, 300, 24, 6, seed=block_w)
+    base = ref.bucket_insert_chunk_ref(ids, rows, covers, counts, seeds,
+                                       thr)
+    got = bucket_insert_chunk_pallas(ids, rows, covers, counts, seeds,
+                                     thr, block_w=block_w,
+                                     interpret=True)
+    _assert_state_equal(got, (base[0], base[1], base[2]))
+
+
+def test_all_invalid_ids_are_noop():
+    ids, rows, covers, counts, seeds, thr = _random_problem(
+        9, 21, 11, 3, seed=99)
+    ids = jnp.full_like(ids, -1)
+    got = bucket_insert_chunk_pallas(ids, rows, covers, counts, seeds,
+                                     thr, interpret=True)
+    _assert_state_equal(got, (covers, counts, seeds))
+
+
+def test_exact_state_equivalence_end_to_end(incidence):
+    """streaming_maxcover(use_kernel=True) == scan path, bit-for-bit:
+    every StreamState field plus the finalized (seeds, coverage)."""
+    X, _ = incidence
+    rows = jnp.asarray(X[:96])
+    ids = jnp.arange(96, dtype=jnp.int32)
+    lower = jnp.float32(float(np.max(
+        np.asarray(jax.lax.population_count(rows).sum(axis=1)))))
+    sa, ca, st_a = streaming.streaming_maxcover(ids, rows, 8, 0.077,
+                                                lower, use_kernel=False)
+    sb, cb, st_b = streaming.streaming_maxcover(ids, rows, 8, 0.077,
+                                                lower, use_kernel=True)
+    for a, b, name in zip(st_a, st_b, streaming.StreamState._fields):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"state.{name} mismatch")
+    assert int(ca) == int(cb)
+    np.testing.assert_array_equal(np.asarray(sa), np.asarray(sb))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("b,w,c,k", [(63, 600, 128, 16),
+                                     (64, 1024, 96, 32),
+                                     (48, 257, 200, 25)])
+def test_fused_large_shape_sweep(b, w, c, k):
+    ids, rows, covers, counts, seeds, thr = _random_problem(
+        b, w, c, k, seed=b + w + c + k)
+    got = bucket_insert_chunk_pallas(ids, rows, covers, counts, seeds,
+                                     thr, interpret=True)
+    want = ref.bucket_insert_chunk_ref(ids, rows, covers, counts, seeds,
+                                       thr)
+    _assert_state_equal(got, (want[0], want[1], want[2]))

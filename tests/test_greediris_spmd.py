@@ -8,11 +8,11 @@ import jax, jax.numpy as jnp, numpy as np
 from repro.graphs import generators
 from repro.graphs.csr import padded_adjacency
 from repro.core import greediris, maxcover
+from repro.runtime.jaxcompat import make_mesh
 g = generators.erdos_renyi(200, 8.0, seed=1)
 nbr, prob, wt = padded_adjacency(g)
 key = jax.random.key(0)
-mesh = jax.make_mesh((8,), ("machines",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("machines",))
 """
 
 
@@ -86,10 +86,10 @@ import jax, jax.numpy as jnp, numpy as np
 from repro.graphs import generators
 from repro.graphs.csr import padded_adjacency
 from repro.core import greediris
+from repro.runtime.jaxcompat import make_mesh
 g = generators.erdos_renyi(128, 6.0, seed=2)
 nbr, prob, wt = padded_adjacency(g)
-mesh = jax.make_mesh((2, 4), ("pod", "machines"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("pod", "machines"))
 fn, _, _ = greediris.build_round(
     mesh, ("pod", "machines"), n=128, theta=256, k=4,
     max_degree=g.max_in_degree())
@@ -107,13 +107,13 @@ from repro.configs import get_config
 from repro.models import model as model_lib
 from repro.launch import specs as specs_lib
 from repro.optim import adamw
+from repro.runtime.jaxcompat import make_mesh, set_mesh
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = get_config("qwen3-moe-235b-a22b", smoke=True)
 opt = adamw.OptConfig(warmup_steps=1, total_steps=4)
 bundle = model_lib.build(cfg, opt)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     state, specs = bundle.init_state(jax.random.key(0))
     sps = model_lib.concretize_pspecs(
         bundle.state_pspecs(specs), jax.eval_shape(lambda: state), mesh)

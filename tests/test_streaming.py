@@ -3,6 +3,7 @@ import itertools
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
@@ -74,3 +75,70 @@ def test_streaming_kernel_path(incidence):
                                                jnp.float32(40.0),
                                                use_kernel=True)
     assert int(cov_a) == int(cov_b)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@settings(max_examples=8, deadline=None)
+@given(st.integers(6, 14), st.integers(16, 64), st.integers(1, 4),
+       st.integers(0, 2**31))
+def test_streaming_guarantee_vs_greedy(use_kernel, n, theta, k, seed):
+    """McGregor-Vu for both receiver paths: streamed coverage
+    >= (1/2 - delta) * greedy coverage, and finalize returns the
+    argmax bucket."""
+    delta = 0.077
+    rng = np.random.default_rng(seed)
+    dense = rng.random((n, theta)) < 0.3
+    rows = bitset.pack_bool_matrix(jnp.asarray(dense))
+    lower = float(np.max(dense.sum(axis=1)))
+    if lower == 0:
+        return
+    ids = jnp.arange(n, dtype=jnp.int32)
+    _, cov, state = streaming.streaming_maxcover(
+        ids, rows, k, delta, jnp.float32(lower), use_kernel=use_kernel)
+    greedy = maxcover.greedy_maxcover(rows, k)
+    # greedy >= (1-1/e) OPT >= OPT/2, so this is the practical bound
+    # the paper reports (streaming within ~half of greedy).
+    assert int(cov) >= np.floor((0.5 - delta) * int(greedy.coverage))
+    # finalize picks the bucket with the largest cover
+    per_bucket = np.asarray(bitset.coverage_size(state.covers))
+    assert int(cov) == int(per_bucket.max())
+    seeds, cov2 = streaming.finalize(state)
+    np.testing.assert_array_equal(
+        np.asarray(seeds),
+        np.asarray(state.seeds[int(np.argmax(per_bucket))]))
+    assert int(cov2) == int(cov)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_full_bucket_seed_slots_untouched(use_kernel):
+    """Regression: once a bucket holds k seeds, a later candidate —
+    even with a huge marginal gain clearing every threshold — must be
+    rejected, leaving seed slots and counts untouched (the
+    clip(counts, k-1) write slot is only reachable via accept, which
+    requires counts < k)."""
+    k, w = 1, 4
+    first = jnp.asarray([0xFFFFFFFF, 0, 0, 0], dtype=jnp.uint32)
+    # disjoint from `first`, gain 96 > gain 32 of the first row
+    huge = jnp.asarray([0, 0xFFFFFFFF, 0xFFFFFFFF, 0xFFFFFFFF],
+                       dtype=jnp.uint32)
+    rows = jnp.stack([first, huge])
+    ids = jnp.asarray([7, 8], dtype=jnp.int32)
+    # lower=1 -> every threshold guess_b/(2k) <= ~1, both rows clear it
+    state = streaming.init_state(k, 0.077, 1.0, w)
+    state = streaming.insert_chunk(state, ids, rows, k,
+                                   use_kernel=use_kernel)
+    counts = np.asarray(state.counts)
+    seeds = np.asarray(state.seeds)
+    assert (counts == 1).all()          # every bucket filled by row 0
+    assert (seeds[:, 0] == 7).all()     # ...and never overwritten
+    np.testing.assert_array_equal(
+        np.asarray(state.covers), np.broadcast_to(
+            np.asarray(first), state.covers.shape))
+    streaming.finalize(state)           # invariant check passes
+
+
+def test_finalize_asserts_on_overfilled_bucket():
+    state = streaming.init_state(2, 0.077, 1.0, 4)
+    bad = state._replace(counts=state.counts + 3)   # counts > k = 2
+    with pytest.raises(AssertionError, match="overfilled"):
+        streaming.finalize(bad)
