@@ -1,0 +1,167 @@
+"""CI bench-regression gate.
+
+Compares a freshly measured ``kernels_bench.py --json`` artifact
+against the committed baseline and fails (exit 1) if any kernel row
+regressed more than ``--threshold`` (default 1.5x).
+
+Both artifacts carry a ``meta.calib_us`` scalar — the time of a fixed
+reference workload (several ms, min-of-9) measured alongside the
+rows.  Each row is divided by its run's calibration before comparing,
+so absolute CPU-speed differences between the baseline machine and
+the CI runner cancel out and the threshold gates genuine per-row
+regressions (a de-fused kernel, a quadratic slip in a reference path)
+instead of runner hardware — in either direction: a faster runner
+cannot mask a real slowdown, a slower one cannot fake it.  When
+either artifact lacks calibration the gate falls back to raw µs.
+
+  python benchmarks/check_regression.py BENCH_kernels.json \
+      benchmarks/baselines/cpu.json [--threshold 1.5]
+
+Rows present only in the current run are reported as new (not an
+error); rows present only in the baseline fail the gate — a kernel
+benchmark silently disappearing is exactly the kind of regression the
+gate exists to catch.
+
+Refresh the baseline intentionally with ``--update-baseline``, which
+measures and then merges into the baseline taking the per-row MAX:
+
+  for i in 1 2 3; do \
+    PYTHONPATH=src python -m benchmarks.kernels_bench --fast \
+        --json /tmp/b.json; \
+    python benchmarks/check_regression.py /tmp/b.json \
+        benchmarks/baselines/cpu.json --update-baseline; \
+  done
+
+A generous (typical-worst) baseline is deliberate: current runs
+report contention-robust minima, so a lucky-fast committed baseline
+would bias every future ratio upward and flake the gate; merging the
+max over a few runs keeps honest headroom while a real >1.5x
+regression still clears it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> tuple[dict[str, dict], float | None]:
+    """Returns (rows, calib_us); calib_us = None when absent."""
+    with open(path) as f:
+        doc = json.load(f)
+    calib = doc.get("meta", {}).get("calib_us")
+    return doc["rows"], (float(calib) if calib else None)
+
+
+def compare(current: dict[str, dict], baseline: dict[str, dict],
+            threshold: float, cur_calib: float | None = None,
+            base_calib: float | None = None):
+    """Returns (regressions, missing, new) row-name lists; prints the
+    per-row comparison table as a side effect.
+
+    The calibrated view is only used when BOTH artifacts carry a
+    calibration sample; otherwise the gate is raw-only (a one-sided
+    calibration would divide ratios by an arbitrary scale and could
+    silently wave real regressions through)."""
+    calibrated_view = bool(cur_calib and base_calib)
+    regressions, missing, new = [], [], []
+    for name in sorted(set(current) | set(baseline)):
+        if name not in current:
+            missing.append(name)
+            print(f"MISSING   {name} (in baseline, not measured)")
+            continue
+        cur = float(current[name]["us"])
+        if name not in baseline:
+            new.append(name)
+            print(f"NEW       {name}: {cur:.1f}us (no baseline)")
+            continue
+        base = float(baseline[name]["us"])
+        raw = cur / base if base > 0 else float("inf")
+        if calibrated_view:
+            ratio = raw * base_calib / cur_calib
+            detail = f"raw {raw:.2f}x, calibrated {ratio:.2f}x"
+        else:
+            ratio = raw
+            detail = f"raw {raw:.2f}x"
+        status = "REGRESSED" if ratio > threshold else "ok"
+        print(f"{status:10s}{name}: {cur:.1f}us vs {base:.1f}us "
+              f"({detail})")
+        if ratio > threshold:
+            regressions.append(name)
+    return regressions, missing, new
+
+
+def update_baseline(current_path: str, baseline_path: str) -> int:
+    """Merge the current artifact into the baseline, per-row max,
+    creating the baseline if absent.
+
+    The baseline keeps ONE calibration (from the run that created it)
+    and rows merged from later runs are rescaled into that
+    calibration's units first — rows and calib must come from a
+    consistent frame or every future normalized ratio is skewed by
+    whichever run happened to own the merged calib."""
+    with open(current_path) as f:
+        cur = json.load(f)
+    try:
+        with open(baseline_path) as f:
+            base = json.load(f)
+    except FileNotFoundError:
+        base = None
+    if base is None:
+        base = cur
+    else:
+        cur_calib = cur.get("meta", {}).get("calib_us")
+        base_calib = base.get("meta", {}).get("calib_us")
+        scale = (float(base_calib) / float(cur_calib)
+                 if cur_calib and base_calib else 1.0)
+        for name, row in cur["rows"].items():
+            old = base["rows"].get(name)
+            rescaled = round(float(row["us"]) * scale, 3)
+            if old is None or rescaled > float(old["us"]):
+                base["rows"][name] = dict(row, us=rescaled)
+    with open(baseline_path, "w") as f:
+        json.dump(base, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"merged {len(cur['rows'])} rows into {baseline_path}")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="freshly measured BENCH_kernels.json")
+    ap.add_argument("baseline", nargs="?",
+                    default="benchmarks/baselines/cpu.json")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="max allowed calibrated current/baseline ratio")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="instead of gating, merge the current run "
+                         "into the baseline taking the per-row max "
+                         "(see module docstring)")
+    args = ap.parse_args(argv)
+
+    if args.update_baseline:
+        return update_baseline(args.current, args.baseline)
+
+    cur_rows, cur_calib = load(args.current)
+    base_rows, base_calib = load(args.baseline)
+    if cur_calib and base_calib:
+        print(f"calibration: current {cur_calib:.1f}us, "
+              f"baseline {base_calib:.1f}us "
+              f"(runner speed ratio {cur_calib/base_calib:.2f}x)")
+    else:
+        print("calibration: absent from one or both artifacts — "
+              "gating on raw us only")
+    regressions, missing, _ = compare(cur_rows, base_rows,
+                                      args.threshold, cur_calib,
+                                      base_calib)
+    if regressions or missing:
+        print(f"\nFAIL: {len(regressions)} row(s) regressed "
+              f">{args.threshold}x, {len(missing)} baseline row(s) "
+              f"missing")
+        return 1
+    print(f"\nOK: no row regressed >{args.threshold}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

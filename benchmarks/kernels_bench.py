@@ -6,22 +6,78 @@ numbers reported here are (a) the jnp reference path wall time on CPU
 and (b) the analytic VMEM-roofline µs the Pallas kernel targets on a
 v5e (bytes / 819 GB/s), which is what the kernel's BlockSpec tiling is
 sized for.
+
+``--json OUT`` additionally writes every row to a JSON file (the
+artifact the CI bench-regression gate diffs against
+``benchmarks/baselines/cpu.json``); ``--fast`` shrinks the shape
+sweep to the CI-sized subset whose row names match that baseline.
 """
 from __future__ import annotations
+
+import argparse
+import json
+import platform
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, timeit as _timeit
 from repro.kernels import ref
 
 HBM_BW = 819e9
 
+_RESULTS: dict[str, dict] = {}
+_GATE_MODE = False   # set by main(): gate artifacts get robust timing
 
-def main():
+
+def timeit(fn, *args):
+    """Gate mode (--fast/--json): min-of-7 after 2 warmups — the
+    regression gate compares across runners, so use the
+    contention-robust statistic (common.timeit docstring).  Plain
+    report mode: cheap median-of-3 (the 512 MB full-sweep shapes
+    do not need 18 executions for a human-readable number)."""
+    if _GATE_MODE:
+        return _timeit(fn, *args, warmup=2, iters=7, reduce="min")
+    return _timeit(fn, *args)
+
+
+def calibration_us() -> float:
+    """Fixed reference workload timed alongside the bench rows.
+
+    The regression gate divides every row by this before comparing
+    against the committed baseline, so absolute CPU speed differences
+    between the baseline machine and the CI runner cancel out and the
+    1.5x threshold gates genuine per-row regressions only.  Sized to
+    run several ms so its own min-of-N is stable under scheduler
+    noise (a noisy calibration would inject false ratios into every
+    row)."""
+    x = jnp.asarray(np.random.default_rng(7).integers(
+        0, 2**32, (8192, 1024), dtype=np.uint32))
+
+    @jax.jit
+    def work(a):
+        return jnp.sum(jax.lax.population_count(a).astype(jnp.int32))
+
+    return _timeit(work, x, warmup=2, iters=9, reduce="min") * 1e6
+
+
+def record(name: str, us_per_call: float, derived: str = ""):
+    """Keep the min across measurement passes: main() runs the row
+    sweep twice so a transient contention burst during one pass cannot
+    own every sample of a row (the row's 7 iters span only a few ms;
+    the two passes are seconds apart).  Rows are emitted once, after
+    both passes, so the CSV stream stays one line per row."""
+    if name in _RESULTS and float(_RESULTS[name]["us"]) <= us_per_call:
+        return
+    _RESULTS[name] = {"us": round(us_per_call, 3), "derived": derived}
+
+
+def bench_coverage(fast: bool):
     rng = np.random.default_rng(0)
-    for (n, w) in ((4096, 512), (16384, 1024), (65536, 2048)):
+    shapes = ((4096, 512),) if fast else ((4096, 512), (16384, 1024),
+                                          (65536, 2048))
+    for (n, w) in shapes:
         rows = jnp.asarray(rng.integers(0, 2**32, (n, w),
                                         dtype=np.uint32))
         cov = jnp.asarray(rng.integers(0, 2**32, (w,), dtype=np.uint32))
@@ -29,48 +85,123 @@ def main():
         t = timeit(fn, rows, cov)
         bytes_moved = n * w * 4
         target_us = bytes_moved / HBM_BW * 1e6
-        emit(f"kernels/coverage_ref_cpu/n={n},w={w}", t * 1e6,
-             f"tpu_roofline_target_us={target_us:.1f} "
-             f"GBps_cpu={bytes_moved/t/1e9:.1f}")
+        record(f"kernels/coverage_ref_cpu/n={n},w={w}", t * 1e6,
+               f"tpu_roofline_target_us={target_us:.1f} "
+               f"GBps_cpu={bytes_moved/t/1e9:.1f}")
     covers = jnp.asarray(rng.integers(0, 2**32, (63, 2048),
                                       dtype=np.uint32))
     row = jnp.asarray(rng.integers(0, 2**32, (2048,), dtype=np.uint32))
     fn = jax.jit(ref.bucket_gains_ref)
     t = timeit(fn, row, covers)
-    emit("kernels/bucket_ref_cpu/B=63,w=2048", t * 1e6,
-         f"tpu_roofline_target_us={63*2048*4/HBM_BW*1e6:.2f}")
+    record("kernels/bucket_ref_cpu/B=63,w=2048", t * 1e6,
+           f"tpu_roofline_target_us={63*2048*4/HBM_BW*1e6:.2f}")
 
-    # --- streaming receiver: per-candidate scan vs fused chunk ---
-    # scan path: one bucket-gain pass + a [B, W] covers round-trip per
-    # candidate -> C * (2*B*W + W) words of HBM traffic per chunk.
-    # fused path: covers VMEM-resident across the in-kernel candidate
-    # loop -> (2*B*W + C*W) words, one launch.  CPU wall times below
-    # (fused runs interpret-emulated); the roofline columns carry the
-    # HBM-traffic model the kernel targets on TPU.
+
+def bench_receiver(fast: bool):
+    """Streaming receiver: per-candidate scan vs fused chunk vs the
+    double-buffered multi-chunk pipelined stream.
+
+    Launch / HBM-traffic model for a stream of R chunks x C candidates
+    (T = R*C) through B buckets of W words:
+
+      scan       T * (2*B*W + W) words,  T launches (covers round-trip
+                                         per candidate)
+      fused      R * 2*B*W + T*W words,  R launches (covers round-trip
+                                         per chunk)
+      pipelined  2*B*W + T*W     words,  1 launch, chunk r+1's DMA
+                                         hidden behind chunk r's
+                                         insertion
+
+    CPU wall times below (the kernels run interpret-emulated); the
+    roofline columns carry the HBM-traffic model the kernels target
+    on TPU.
+    """
     from repro.core import streaming
-    k, delta, w, c = 32, 0.077, 512, 128
+    rng = np.random.default_rng(1)
+    k, delta, w = (8, 0.077, 128) if fast else (32, 0.077, 512)
+    r, c = (3, 32) if fast else (4, 128)
+    total = r * c
     b = streaming.num_buckets(k, delta)
-    rows_c = jnp.asarray(rng.integers(0, 2**32, (c, w), dtype=np.uint32))
-    ids_c = jnp.arange(c, dtype=jnp.int32)
+    rows = jnp.asarray(rng.integers(0, 2**32, (total, w),
+                                    dtype=np.uint32))
+    ids = jnp.arange(total, dtype=jnp.int32)
     state = streaming.init_state(k, delta, 64.0, w)
+
     t_scan = timeit(
-        lambda s, i, r: streaming.insert_chunk(s, i, r, k=k,
-                                               use_kernel=False),
-        state, ids_c, rows_c)
+        lambda s, i, rr: streaming.insert_chunk(s, i, rr, k=k,
+                                                use_kernel=False),
+        state, ids, rows)
     t_fused = timeit(
-        lambda s, i, r: streaming.insert_chunk(s, i, r, k=k,
-                                               use_kernel=True),
-        state, ids_c, rows_c)
-    scan_bytes = c * (2 * b * w + w) * 4
-    fused_bytes = (2 * b * w + c * w) * 4
-    emit(f"streaming/receiver_scan/B={b},w={w},C={c}", t_scan * 1e6,
-         f"tpu_roofline_target_us={scan_bytes/HBM_BW*1e6:.2f} "
-         f"launches={c}")
-    emit(f"streaming/receiver_fused/B={b},w={w},C={c}", t_fused * 1e6,
-         f"tpu_roofline_target_us={fused_bytes/HBM_BW*1e6:.2f} "
-         f"launches=1 hbm_traffic_ratio={scan_bytes/fused_bytes:.1f}x "
-         f"cpu_mode=interpret-emulation")
+        lambda s, i, rr: streaming.insert_chunk(s, i, rr, k=k,
+                                                use_kernel=True),
+        state, ids, rows)
+    ids_ch, rows_ch = streaming.chunk_stream(ids, rows, c)
+    t_pipe = timeit(
+        lambda s, i, rr: streaming.insert_stream(s, i, rr, k=k),
+        state, ids_ch, rows_ch)
+
+    scan_bytes = total * (2 * b * w + w) * 4
+    fused_bytes = (r * 2 * b * w + total * w) * 4
+    pipe_bytes = (2 * b * w + total * w) * 4
+    record(f"streaming/receiver_scan/B={b},w={w},T={total}",
+           t_scan * 1e6,
+           f"tpu_roofline_target_us={scan_bytes/HBM_BW*1e6:.2f} "
+           f"launches={total}")
+    record(f"streaming/receiver_fused/B={b},w={w},T={total}",
+           t_fused * 1e6,
+           f"tpu_roofline_target_us={fused_bytes/HBM_BW*1e6:.2f} "
+           f"launches={r} hbm_traffic_ratio={scan_bytes/fused_bytes:.1f}x "
+           f"cpu_mode=interpret-emulation")
+    record(f"streaming/receiver_pipelined/B={b},w={w},T={total},R={r}",
+           t_pipe * 1e6,
+           f"tpu_roofline_target_us={pipe_bytes/HBM_BW*1e6:.2f} "
+           f"launches=1 hbm_traffic_ratio={scan_bytes/pipe_bytes:.1f}x "
+           f"vs_fused={fused_bytes/pipe_bytes:.2f}x "
+           f"cpu_mode=interpret-emulation")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write rows to OUT as JSON (the CI "
+                         "bench-regression artifact)")
+    ap.add_argument("--fast", action="store_true",
+                    help="CI-sized subset (row names match "
+                         "benchmarks/baselines/cpu.json)")
+    args = ap.parse_args(argv)
+
+    global _GATE_MODE
+    _GATE_MODE = bool(args.fast or args.json)
+    _RESULTS.clear()
+    calib = calibration_us()
+    # Gate artifacts get two measurement passes (record() keeps the
+    # per-row min) so one contention burst cannot own a row; the
+    # plain report runs each row once.
+    for _ in range(2 if _GATE_MODE else 1):
+        bench_coverage(args.fast)
+        bench_receiver(args.fast)
+    calib = min(calib, calibration_us())
+    for name, row in _RESULTS.items():
+        emit(name, float(row["us"]), row["derived"])
+
+    if args.json:
+        doc = {
+            "meta": {
+                "fast": args.fast,
+                "backend": jax.default_backend(),
+                "jax": jax.__version__,
+                "python": platform.python_version(),
+                "machine": platform.machine(),
+                "calib_us": round(calib, 3),
+            },
+            "rows": _RESULTS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {len(_RESULTS)} rows to {args.json}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

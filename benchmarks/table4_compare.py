@@ -7,7 +7,6 @@ k-global-reductions baseline, executed on the same mesh.
 """
 from __future__ import annotations
 
-import textwrap
 
 from benchmarks.common import emit, run_devices
 

@@ -31,7 +31,6 @@ dry-run can *measure* the collective volume GreediRIS eliminates.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import NamedTuple, Sequence
 
@@ -72,7 +71,7 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
                 max_steps: int = 32, sample_chunks: int = 1,
                 use_kernel: bool = False, shuffle: str = "dense",
                 est_rrr_len: float = 16.0,
-                chunk_size: int | None = None):
+                chunk_size: int | str | None = None):
     """Build the jittable distributed round fn(nbr, prob, wt, key).
 
     The graph (padded reverse adjacency [n_pad, d]) is replicated on
@@ -82,10 +81,18 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
 
     chunk_size: receiver insertion granularity under "gather": the
     [m*kk] gathered stream is split into ceil(m*kk / chunk_size)
-    chunks, each inserted with one fused-kernel launch (None = whole
-    stream in one chunk).  Ignored under "pipeline", whose chunk is
-    inherently the kk-seed ring payload (the ppermute of chunk r+1
-    overlaps the fused insertion of chunk r).
+    chunks (None = whole stream in one chunk, except with use_kernel
+    where None means "auto").  With use_kernel the
+    whole chunked stream goes through ``streaming.insert_stream`` —
+    ONE pipelined pallas_call for the entire stream, covers
+    VMEM-resident throughout, chunk r+1's rows double-buffered
+    HBM->VMEM while chunk r inserts; without use_kernel each chunk is
+    a ``lax.scan`` insertion step (legacy, bit-identical).  The
+    string "auto" solves chunk_size from B, W, k and the ~16 MiB VMEM
+    budget (``repro.kernels.bucket_insert.auto_chunk_size``).
+    Ignored under "pipeline", whose chunk is inherently the kk-seed
+    ring payload (the ppermute of chunk r+1 overlaps the fused
+    insertion of chunk r).
 
     shuffle:
       "dense"  — all_to_all of the packed incidence bitmatrix (paper-
@@ -100,10 +107,14 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
                  buckets (x2 safety); overflow pairs are dropped and
                  counted (quality effect = slightly smaller theta).
     """
-    if chunk_size is not None and chunk_size <= 0:
+    if isinstance(chunk_size, str) and chunk_size != "auto":
         raise ValueError(
-            f"chunk_size must be a positive candidate count or None "
-            f"(whole stream), got {chunk_size}")
+            f"chunk_size must be an int, None, or 'auto', "
+            f"got {chunk_size!r}")
+    if isinstance(chunk_size, int) and chunk_size <= 0:
+        raise ValueError(
+            f"chunk_size must be a positive candidate count, None "
+            f"(whole stream), or 'auto', got {chunk_size}")
     axes = tuple(axes)
     m = _axis_size(mesh, axes)
     n_pad = ((n + m - 1) // m) * m
@@ -113,6 +124,17 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
     w_local = theta_local // 32
     w_global = (theta_local * m) // 32
     kk = max(1, int(round(alpha_trunc * k)))
+    if chunk_size == "auto" or (chunk_size is None and use_kernel
+                                and aggregate == "gather"):
+        # Solve C from the receiver's VMEM residency: B buckets of
+        # W_global words + the double-buffered [2, C, W_global] rows
+        # must fit the per-core budget.  This is also the default for
+        # the kernelized gather receiver — a single whole-stream chunk
+        # would double-buffer the entire m*kk stream in VMEM, which at
+        # production scale cannot fit (and buys no overlap at R=1).
+        from repro.kernels.bucket_insert import auto_chunk_size
+        chunk_size = auto_chunk_size(
+            streaming.num_buckets(k, delta), w_global, k, total=m * kk)
     # sparse-shuffle bucket capacity: pairs per (src, dst) pair
     cap = max(64, int(2.0 * theta_local * est_rrr_len / m))
 
@@ -214,22 +236,22 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
             ids_all = lax.all_gather(sent_ids, axes, tiled=True)   # [m*kk]
             rows_all = lax.all_gather(sent_rows, axes, tiled=True)
             total = m * kk
-            if chunk_size and chunk_size < total:
-                # Chunked insertion: one fused-kernel launch per
-                # chunk_size candidates.  Pad with id -1 (rejected
-                # unconditionally, zero rows) to a whole number of
-                # chunks — exactness is preserved.
-                pad = (-total) % chunk_size
-                if pad:
-                    ids_all = jnp.concatenate(
-                        [ids_all, jnp.full((pad,), -1, jnp.int32)])
-                    rows_all = jnp.concatenate(
-                        [rows_all,
-                         jnp.zeros((pad, rows_all.shape[1]),
-                                   rows_all.dtype)])
-                nch = (total + pad) // chunk_size
-                ids_ch = ids_all.reshape(nch, chunk_size)
-                rows_ch = rows_all.reshape(nch, chunk_size, -1)
+            if use_kernel:
+                # Pipelined receiver: the whole gathered stream in ONE
+                # pallas_call — covers VMEM-resident across all
+                # chunks, chunk r+1's rows double-buffered HBM->VMEM
+                # while chunk r inserts.  Tail padding with id -1
+                # (rejected unconditionally, zero rows) is exact.
+                cs = min(chunk_size or total, total)
+                ids_ch, rows_ch = streaming.chunk_stream(
+                    ids_all, rows_all, cs)
+                state = streaming.insert_stream(state, ids_ch, rows_ch,
+                                                k)
+            elif chunk_size and chunk_size < total:
+                # Legacy chunked insertion (bit-identical fallback):
+                # one scan step per chunk_size candidates.
+                ids_ch, rows_ch = streaming.chunk_stream(
+                    ids_all, rows_all, chunk_size)
 
                 def chunk_body(st, x):
                     ci, cr = x
@@ -249,6 +271,10 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
                 st, b_ids, b_rows = carry
                 nxt_ids = lax.ppermute(b_ids, axes, pairs)
                 nxt_rows = lax.ppermute(b_rows, axes, pairs)
+                # Per-ring-step fused chunk kernel (when use_kernel):
+                # the stream kernel's double buffer buys nothing at
+                # R=1, so the ring keeps the direct VMEM BlockSpec
+                # mapping of its kk-seed payload.
                 st = streaming.insert_chunk(st, b_ids, b_rows, k,
                                             use_kernel)
                 return (st, nxt_ids, nxt_rows), None

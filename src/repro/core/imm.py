@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bitset, maxcover, randgreedi, theory
+from repro.core import maxcover, randgreedi, theory
 from repro.core.rrr import sample_incidence
 from repro.graphs.csr import CSRGraph, padded_adjacency
 

@@ -8,23 +8,30 @@ independent -> the paper parallelizes them over 63 OpenMP threads; we
 instead make B a leading vector axis so one candidate updates all
 buckets in a single fused popcount/compare/select (VPU data parallel).
 
-Two receiver implementations share the same arrival-order semantics:
+Three receiver implementations share the same arrival-order semantics
+and produce bit-identical ``StreamState``:
 
-  * ``use_kernel=False`` — reference ``lax.scan`` over candidates,
-    one ``_insert_one`` step each (the legacy path, kept as the
-    oracle and CPU fallback);
-  * ``use_kernel=True`` — the fused chunk-resident Pallas kernel
+  * "scan" — reference ``lax.scan`` over candidates, one
+    ``_insert_one`` step each (the legacy path, kept as the oracle
+    and CPU fallback);
+  * "fused" — the chunk-resident Pallas kernel
     (``repro.kernels.bucket_insert``): one pallas_call per chunk with
     the [B, W] bucket covers resident in VMEM across the in-kernel
     candidate loop, so gains, the accept decision, the cover
     OR-update, and the seed-slot write are fused per candidate instead
     of launching one ``bucket_gains`` kernel per candidate and
-    round-tripping the covers through HBM every step.  The two paths
-    produce bit-identical ``StreamState``.
+    round-tripping the covers through HBM every step;
+  * "pipelined" — the multi-chunk stream kernel behind
+    ``insert_stream``: ONE pallas_call for a whole [R, C] candidate
+    stream, covers resident in VMEM across all chunks, and chunk
+    r+1's rows double-buffered HBM->VMEM while chunk r inserts (the
+    in-kernel analogue of the paper's nonblocking streaming).
 
 The incremental ``insert_chunk`` API is what the distributed pipeline
 uses to interleave bucket updates with the gather of the next chunk of
-remote seeds (the SPMD analogue of the paper's nonblocking streaming).
+remote seeds (the SPMD analogue of the paper's nonblocking streaming);
+``insert_stream`` is the resident-state entry point the "gather"
+schedule feeds the whole gathered stream through at once.
 """
 from __future__ import annotations
 
@@ -117,6 +124,64 @@ def insert_chunk(state: StreamState, seed_ids: jnp.ndarray,
     return state
 
 
+@functools.partial(jax.jit, static_argnames=("k", "use_kernel"))
+def insert_stream(state: StreamState, seed_ids: jnp.ndarray,
+                  rows: jnp.ndarray, k: int,
+                  use_kernel: bool = True) -> StreamState:
+    """Stream a whole chunked candidate stream (ids [R, C], rows
+    [R, C, W]) through all buckets in arrival order (row-major over
+    chunks, then candidates).
+
+    ``use_kernel=True`` routes the entire stream through the pipelined
+    multi-chunk Pallas kernel: one pallas_call total, the bucket state
+    VMEM-resident across all R chunks, chunk r+1's rows DMA'd in
+    (double-buffered) while chunk r inserts.  ``use_kernel=False``
+    folds the legacy ``insert_chunk`` scan over the chunks.  Both are
+    bit-identical to streaming the flattened [R*C] candidates one by
+    one.
+    """
+    if k != state.seeds.shape[1]:
+        raise ValueError(
+            f"k={k} does not match the state's bucket capacity "
+            f"{state.seeds.shape[1]} (seeds.shape[1])")
+    if seed_ids.ndim != 2 or rows.ndim != 3:
+        raise ValueError(
+            f"insert_stream takes a chunked stream: ids [R, C] and "
+            f"rows [R, C, W]; got ids {seed_ids.shape} and rows "
+            f"{rows.shape} — use insert_chunk for a flat chunk")
+    if use_kernel:
+        from repro.kernels import ops as kops
+        covers, counts, seeds = kops.bucket_insert_stream(
+            seed_ids, rows, state.covers, state.counts, state.seeds,
+            state.thresholds)
+        return StreamState(covers, counts, seeds, state.thresholds)
+
+    def body(st, x):
+        ids_c, rows_c = x
+        return insert_chunk(st, ids_c, rows_c, k, use_kernel=False), None
+
+    state, _ = jax.lax.scan(body, state, (seed_ids, rows))
+    return state
+
+
+def chunk_stream(seed_ids: jnp.ndarray, rows: jnp.ndarray,
+                 chunk_size: int):
+    """Reshape a flat candidate stream (ids [T], rows [T, W]) into the
+    [R, C] / [R, C, W] chunked layout ``insert_stream`` takes, padding
+    the tail chunk with id -1 / zero rows (rejected unconditionally,
+    so exactness is preserved)."""
+    total = seed_ids.shape[0]
+    pad = (-total) % chunk_size
+    if pad:
+        seed_ids = jnp.concatenate(
+            [seed_ids, jnp.full((pad,), -1, seed_ids.dtype)])
+        rows = jnp.concatenate(
+            [rows, jnp.zeros((pad, rows.shape[1]), rows.dtype)])
+    nch = (total + pad) // chunk_size
+    return (seed_ids.reshape(nch, chunk_size),
+            rows.reshape(nch, chunk_size, rows.shape[1]))
+
+
 def finalize(state: StreamState):
     """Return (seeds [k], coverage) of the best (argmax-cover) bucket.
 
@@ -136,18 +201,42 @@ def finalize(state: StreamState):
 
 @functools.partial(jax.jit,
                    static_argnames=("k", "delta", "num_buckets_override",
-                                    "use_kernel"))
+                                    "use_kernel", "receiver",
+                                    "chunk_size"))
 def streaming_maxcover(seed_ids: jnp.ndarray, rows: jnp.ndarray, k: int,
                        delta: float, lower: jnp.ndarray,
                        num_buckets_override: int | None = None,
-                       use_kernel: bool = False):
+                       use_kernel: bool = False,
+                       receiver: str | None = None,
+                       chunk_size: int | None = None):
     """One-shot streaming pass over an ordered candidate stream.
 
     ``lower`` is l = the max singleton coverage (OPT >= l and
     OPT <= k*l, hence u/l = k).  Returns (seeds [k], coverage [],
     state).  (1/2 - delta)-approximate per McGregor & Vu.
+
+    ``receiver`` picks the insertion path: "scan" (legacy per-candidate
+    ``lax.scan``), "fused" (one chunk-resident pallas_call), or
+    "pipelined" (the double-buffered multi-chunk stream kernel, the
+    stream split into ``chunk_size``-candidate chunks — VMEM-budget
+    auto-solved when None).  Default None maps ``use_kernel`` onto
+    "fused"/"scan" for backward compatibility.  All three paths yield
+    bit-identical state.
     """
+    if receiver is None:
+        receiver = "fused" if use_kernel else "scan"
+    if receiver not in ("scan", "fused", "pipelined"):
+        raise ValueError(f"unknown receiver path {receiver!r}")
     state = init_state(k, delta, lower, rows.shape[1], num_buckets_override)
-    state = insert_chunk(state, seed_ids, rows, k, use_kernel)
+    if receiver == "pipelined":
+        from repro.kernels import bucket_insert
+        total = seed_ids.shape[0]
+        cs = min(chunk_size or bucket_insert.auto_chunk_size(
+            state.covers.shape[0], rows.shape[1], k, total), max(total, 1))
+        ids_ch, rows_ch = chunk_stream(seed_ids, rows, cs)
+        state = insert_stream(state, ids_ch, rows_ch, k)
+    else:
+        state = insert_chunk(state, seed_ids, rows, k,
+                             use_kernel=(receiver == "fused"))
     seeds, cov = finalize(state)
     return seeds, cov, state

@@ -13,7 +13,7 @@ selection as a first-class pipeline stage (DESIGN.md §5).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp

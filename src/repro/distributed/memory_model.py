@@ -12,7 +12,6 @@ analytic, `memory_s_hlo` upper bound from the compiled module).
 """
 from __future__ import annotations
 
-import math
 
 from repro.configs import param_count
 from repro.configs.shapes import ShapeCell

@@ -1,11 +1,14 @@
-"""Pallas TPU kernel: fused chunked streaming-receiver insertion.
+"""Pallas TPU kernels: fused + pipelined streaming-receiver insertion.
 
 The legacy receiver (``streaming.insert_chunk`` with a ``lax.scan``)
 launches one ``bucket_gains`` pallas_call per streamed candidate and
 round-trips the [B, W] bucket covers through HBM on every step — O(C)
-kernel launches and O(C * B * W) words of HBM traffic per chunk.  This
-kernel streams a whole chunk of C candidate rows [C, W] through all B
-threshold buckets *in arrival order* inside a single pallas_call:
+kernel launches and O(C * B * W) words of HBM traffic per chunk.  Two
+kernels replace it, sharing one in-kernel insertion body:
+
+``bucket_insert_chunk_pallas`` (PR 1) streams a whole chunk of C
+candidate rows [C, W] through all B threshold buckets *in arrival
+order* inside a single pallas_call:
 
   * the bucket covers are loaded into VMEM once and stay resident
     across the in-kernel candidate loop (one HBM read + one write per
@@ -20,10 +23,25 @@ threshold buckets *in arrival order* inside a single pallas_call:
     admission counts ride the candidate loop carry (scalar registers),
     thresholds sit in a tiny [B, 1] block.
 
-HBM traffic drops from O(C) round-trips of the covers to O(1) per
-chunk; launches drop from O(C) to 1.  Exact arrival-order semantics
-(and hence bit-identical ``StreamState``) are preserved: candidate c+1
-sees the covers as updated by candidate c.
+``bucket_insert_stream_pallas`` (PR 2) extends this to a whole
+multi-chunk candidate stream [R, C, W] in ONE pallas_call: the stream
+stays in HBM/ANY memory, the covers / seeds / counts live in VMEM for
+the *entire* stream, and ``pltpu.make_async_copy`` double-buffers the
+HBM->VMEM load of chunk r+1's rows into a [2, C, W] VMEM scratch while
+chunk r inserts — the in-kernel analogue of the paper's nonblocking
+streaming overlap of transfer with insertion.
+
+HBM-traffic model per stream of R chunks x C candidates (T = R*C):
+
+  scan       T * (2*B*W + W) words,   T launches
+  fused      R * 2*B*W + T*W words,   R launches (covers round-trip
+                                      between chunks)
+  pipelined  2*B*W + T*W     words,   1 launch, chunk r+1 DMA hidden
+                                      behind chunk r's insertion
+
+Exact arrival-order semantics (and hence bit-identical
+``StreamState``) are preserved by all paths: candidate c+1 sees the
+covers as updated by candidate c, across chunk boundaries too.
 """
 from __future__ import annotations
 
@@ -36,29 +54,68 @@ from jax.experimental.pallas import tpu as pltpu
 
 BLOCK_W = 512
 
+# Per-core VMEM the auto chunk policy budgets against (v5e ~16 MiB,
+# minus headroom for Mosaic's own spills and the scalar blocks).
+VMEM_BUDGET_BYTES = 14 * (1 << 20)
+_WORD_BYTES = 4
 
-def _kernel(ids_ref, thr_ref, counts_in_ref, rows_ref, covers_in_ref,
-            seeds_in_ref, covers_ref, seeds_ref, counts_out_ref, *,
-            block_w: int):
-    b, w = covers_ref.shape
-    c_total = rows_ref.shape[0]
-    k = seeds_ref.shape[1]
-    num_word_tiles = w // block_w          # w pre-padded to a multiple
 
-    # Materialize the running state in the output blocks once; they
-    # stay VMEM-resident across the whole candidate loop.
-    covers_ref[...] = covers_in_ref[...]
-    seeds_ref[...] = seeds_in_ref[...]
-    lane = jax.lax.broadcasted_iota(jnp.int32, (b, k), 1)
+def _padded_w(w: int, block_w: int = BLOCK_W) -> tuple[int, int]:
+    """(effective block_w, W padded up to a whole number of blocks)."""
+    bw = min(block_w, max(128, w))
+    return bw, w + ((-w) % bw)
 
-    def insert_one(c, counts):            # counts: int32 [B, 1] carry
-        sid = ids_ref[0, c]
+
+def auto_chunk_size(num_buckets: int, num_words: int, k: int,
+                    total: int | None = None,
+                    vmem_budget_bytes: int = VMEM_BUDGET_BYTES,
+                    block_w: int = BLOCK_W) -> int:
+    """Solve the pipelined kernel's chunk size C from the VMEM budget.
+
+    Resident bytes for a [R, C, W] stream through B buckets of
+    capacity k:
+
+      covers in+out   2 * B * Wp          (Wp = W padded to block_w)
+      seeds  in+out   2 * B * k
+      counts/thr      ~4 * B
+      rows double-buf 2 * C * Wp          (the solved-for term)
+
+    Returns the largest C (multiple of 8 sublanes, >= 8) whose
+    double-buffer fits the remaining budget; ``total`` (the stream
+    length m*kk) caps C so a short stream is not over-chunked.
+    """
+    bw, wp = _padded_w(num_words, block_w)
+    state_bytes = _WORD_BYTES * (2 * num_buckets * wp
+                                 + 2 * num_buckets * k
+                                 + 4 * num_buckets)
+    avail = max(0, vmem_budget_bytes - state_bytes)
+    c = avail // (2 * wp * _WORD_BYTES)
+    c = max(8, (c // 8) * 8)
+    if total is not None and total > 0:
+        c = min(c, max(8, -(-total // 8) * 8))
+    return int(c)
+
+
+def _insert_candidates(read_id, read_row_tile, c_total, covers_ref,
+                       seeds_ref, thr_ref, counts, *, block_w: int,
+                       num_word_tiles: int, lane):
+    """Arrival-order insertion of ``c_total`` candidates into the
+    VMEM-resident bucket state — the body shared by the fused-chunk
+    and pipelined-stream kernels.
+
+    read_id(c)          -> int32 scalar candidate id
+    read_row_tile(c, s) -> uint32 [1, block_w] row words at offset s
+    counts              int32 [B, 1] loop carry
+    """
+
+    def insert_one(c, counts):
+        sid = read_id(c)
 
         # Pass 1 over word tiles: marginal gain of candidate c against
         # every bucket's running cover.
         def gain_tile(t, acc):
             s = t * block_w
-            row_t = rows_ref[pl.ds(c, 1), pl.ds(s, block_w)]   # [1, bw]
+            row_t = read_row_tile(c, s)                        # [1, bw]
             cov_t = covers_ref[:, pl.ds(s, block_w)]           # [B, bw]
             pc = jax.lax.population_count(row_t & ~cov_t)
             return acc + jnp.sum(pc.astype(jnp.int32), axis=1,
@@ -66,17 +123,18 @@ def _kernel(ids_ref, thr_ref, counts_in_ref, rows_ref, covers_in_ref,
 
         gains = jax.lax.fori_loop(
             0, num_word_tiles, gain_tile,
-            jnp.zeros((b, 1), dtype=jnp.int32))                # [B, 1]
+            jnp.zeros(counts.shape, dtype=jnp.int32))          # [B, 1]
 
         # Accept decision (Algorithm 5 line 6): valid id, bucket not
         # full, gain clears the bucket's guess_b / (2k) threshold.
+        k = seeds_ref.shape[1]
         accept = ((sid >= 0) & (counts < k)
                   & (gains.astype(jnp.float32) >= thr_ref[...]))
 
         # Pass 2: OR the candidate row into every accepting cover.
         def or_tile(t, _):
             s = t * block_w
-            row_t = rows_ref[pl.ds(c, 1), pl.ds(s, block_w)]
+            row_t = read_row_tile(c, s)
             cov_t = covers_ref[:, pl.ds(s, block_w)]
             covers_ref[:, pl.ds(s, block_w)] = jnp.where(
                 accept, cov_t | row_t, cov_t)
@@ -91,7 +149,80 @@ def _kernel(ids_ref, thr_ref, counts_in_ref, rows_ref, covers_in_ref,
         seeds_ref[...] = jnp.where(hit, sid, seeds_ref[...])
         return counts + accept.astype(jnp.int32)
 
-    counts = jax.lax.fori_loop(0, c_total, insert_one,
+    return jax.lax.fori_loop(0, c_total, insert_one, counts)
+
+
+def _kernel(ids_ref, thr_ref, counts_in_ref, rows_ref, covers_in_ref,
+            seeds_in_ref, covers_ref, seeds_ref, counts_out_ref, *,
+            block_w: int):
+    b, w = covers_ref.shape
+    c_total = rows_ref.shape[0]
+    k = seeds_ref.shape[1]
+
+    # Materialize the running state in the output blocks once; they
+    # stay VMEM-resident across the whole candidate loop.
+    covers_ref[...] = covers_in_ref[...]
+    seeds_ref[...] = seeds_in_ref[...]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (b, k), 1)
+
+    counts = _insert_candidates(
+        lambda c: ids_ref[0, c],
+        lambda c, s: rows_ref[pl.ds(c, 1), pl.ds(s, block_w)],
+        c_total, covers_ref, seeds_ref, thr_ref,
+        counts_in_ref[...], block_w=block_w,
+        num_word_tiles=w // block_w, lane=lane)
+    counts_out_ref[...] = counts
+
+
+def _stream_kernel(ids_ref, thr_ref, counts_in_ref, stream_ref,
+                   covers_in_ref, seeds_in_ref, covers_ref, seeds_ref,
+                   counts_out_ref, rows_buf, ids_buf, row_sem, id_sem,
+                   *, block_w: int):
+    """Multi-chunk pipelined receiver: the [R, C, W] candidate stream
+    and its [R, C] ids stay in HBM/ANY; double-buffered
+    ``make_async_copy``s pull chunk r+1's rows into the [2, C, W] VMEM
+    scratch (and its ids into the [2, C] SMEM scratch — only one
+    chunk's ids are ever scalar-resident, so SMEM pressure is O(C),
+    not O(R*C)) while the shared insertion body consumes chunk r.
+    Covers / seeds / counts never leave VMEM between chunks."""
+    b, w = covers_ref.shape
+    r_total, c_chunk = stream_ref.shape[0], stream_ref.shape[1]
+    k = seeds_ref.shape[1]
+
+    covers_ref[...] = covers_in_ref[...]
+    seeds_ref[...] = seeds_in_ref[...]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (b, k), 1)
+
+    def chunk_dma(slot, r):
+        return (pltpu.make_async_copy(stream_ref.at[r],
+                                      rows_buf.at[slot],
+                                      row_sem.at[slot]),
+                pltpu.make_async_copy(ids_ref.at[r], ids_buf.at[slot],
+                                      id_sem.at[slot]))
+
+    # Warm up: chunk 0 starts loading before the loop.
+    for dma in chunk_dma(0, 0):
+        dma.start()
+
+    def chunk_body(r, counts):
+        slot = jax.lax.rem(r, 2)
+
+        # Kick off chunk r+1's HBM->VMEM/SMEM copies into the other
+        # buffer; they land while chunk r's candidates insert below.
+        @pl.when(r + 1 < r_total)
+        def _():
+            for dma in chunk_dma(jax.lax.rem(r + 1, 2), r + 1):
+                dma.start()
+
+        for dma in chunk_dma(slot, r):
+            dma.wait()
+        return _insert_candidates(
+            lambda c: ids_buf[slot, c],
+            lambda c, s: rows_buf[slot, pl.ds(c, 1), pl.ds(s, block_w)],
+            c_chunk, covers_ref, seeds_ref, thr_ref, counts,
+            block_w=block_w, num_word_tiles=w // block_w, lane=lane)
+
+    counts = jax.lax.fori_loop(0, r_total, chunk_body,
                                counts_in_ref[...])
     counts_out_ref[...] = counts
 
@@ -116,13 +247,12 @@ def bucket_insert_chunk_pallas(seed_ids: jnp.ndarray, rows: jnp.ndarray,
     ``streaming._insert_one`` over the chunk in order.
     """
     b, w = covers.shape
-    bw = min(block_w, max(128, w))
-    pad_w = (-w) % bw
-    if pad_w:
+    bw, wp = _padded_w(w, block_w)
+    if wp != w:
         # Zero padding is exact: padded row words contribute popcount 0
         # to gains and OR identity to covers.
-        rows = jnp.pad(rows, ((0, 0), (0, pad_w)))
-        covers = jnp.pad(covers, ((0, 0), (0, pad_w)))
+        rows = jnp.pad(rows, ((0, 0), (0, wp - w)))
+        covers = jnp.pad(covers, ((0, 0), (0, wp - w)))
     covers_out, seeds_out, counts_out = pl.pallas_call(
         functools.partial(_kernel, block_w=bw),
         in_specs=[
@@ -145,5 +275,68 @@ def bucket_insert_chunk_pallas(seed_ids: jnp.ndarray, rows: jnp.ndarray,
         ],
         interpret=interpret,
     )(seed_ids[None, :].astype(jnp.int32), thresholds[:, None],
+      counts[:, None], rows, covers, seeds)
+    return covers_out[:, :w], counts_out[:, 0], seeds_out
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def bucket_insert_stream_pallas(seed_ids: jnp.ndarray, rows: jnp.ndarray,
+                                covers: jnp.ndarray, counts: jnp.ndarray,
+                                seeds: jnp.ndarray,
+                                thresholds: jnp.ndarray,
+                                block_w: int = BLOCK_W,
+                                interpret: bool = False):
+    """Insert a whole multi-chunk candidate stream, pipelined.
+
+    seed_ids   int32   [R, C]     candidate ids (-1 = padding, skipped)
+    rows       uint32  [R, C, W]  packed covering sets, arrival order
+    covers     uint32  [B, W]     running bucket covers
+    counts     int32   [B]        seeds admitted per bucket
+    seeds      int32   [B, k]     admitted seed ids (-1 pad)
+    thresholds float32 [B]        admission thresholds guess_b / (2k)
+
+    One pallas_call for the entire stream: the rows stay in HBM/ANY,
+    covers / seeds / counts stay VMEM-resident across all R chunks,
+    and chunk r+1's rows DMA in (double-buffered) while chunk r
+    inserts.  Returns (covers, counts, seeds) updated — bit-identical
+    to folding ``bucket_insert_chunk_pallas`` over the R chunks, which
+    is itself bit-identical to the legacy per-candidate scan.
+    """
+    b, w = covers.shape
+    r, c = seed_ids.shape
+    if r == 0:
+        return covers, counts, seeds
+    bw, wp = _padded_w(w, block_w)
+    if wp != w:
+        rows = jnp.pad(rows, ((0, 0), (0, 0), (0, wp - w)))
+        covers = jnp.pad(covers, ((0, 0), (0, wp - w)))
+    covers_out, seeds_out, counts_out = pl.pallas_call(
+        functools.partial(_stream_kernel, block_w=bw),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),     # ids [R, C]
+            pl.BlockSpec(memory_space=pltpu.VMEM),    # thresholds [B, 1]
+            pl.BlockSpec(memory_space=pltpu.VMEM),    # counts in  [B, 1]
+            pl.BlockSpec(memory_space=pltpu.ANY),     # stream [R, C, Wp]
+            pl.BlockSpec(memory_space=pltpu.VMEM),    # covers [B, Wp]
+            pl.BlockSpec(memory_space=pltpu.VMEM),    # seeds  [B, k]
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(covers.shape, covers.dtype),
+            jax.ShapeDtypeStruct(seeds.shape, seeds.dtype),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, c, wp), rows.dtype),       # rows double buf
+            pltpu.SMEM((2, c), jnp.int32),            # ids double buf
+            pltpu.SemaphoreType.DMA((2,)),            # rows sems
+            pltpu.SemaphoreType.DMA((2,)),            # ids sems
+        ],
+        interpret=interpret,
+    )(seed_ids.astype(jnp.int32), thresholds[:, None],
       counts[:, None], rows, covers, seeds)
     return covers_out[:, :w], counts_out[:, 0], seeds_out

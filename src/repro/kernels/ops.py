@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.bucket import bucket_gains_pallas
-from repro.kernels.bucket_insert import bucket_insert_chunk_pallas
+from repro.kernels.bucket_insert import (bucket_insert_chunk_pallas,
+                                         bucket_insert_stream_pallas)
 from repro.kernels.coverage import marginal_gain_pallas
 from repro.kernels.topk_gain import best_gain_index_pallas
 
@@ -44,3 +45,15 @@ def bucket_insert_chunk(seed_ids: jnp.ndarray, rows: jnp.ndarray,
     return bucket_insert_chunk_pallas(seed_ids, rows, covers, counts,
                                       seeds, thresholds,
                                       interpret=_interpret())
+
+
+def bucket_insert_stream(seed_ids: jnp.ndarray, rows: jnp.ndarray,
+                         covers: jnp.ndarray, counts: jnp.ndarray,
+                         seeds: jnp.ndarray, thresholds: jnp.ndarray):
+    """Pipelined streaming-receiver insertion of a whole [R, C, W]
+    candidate stream: one pallas_call with the bucket state
+    VMEM-resident across all chunks and chunk r+1's rows DMA'd in
+    (double-buffered) while chunk r inserts."""
+    return bucket_insert_stream_pallas(seed_ids, rows, covers, counts,
+                                       seeds, thresholds,
+                                       interpret=_interpret())

@@ -56,3 +56,25 @@ def bucket_insert_chunk_ref(seed_ids: jnp.ndarray, rows: jnp.ndarray,
         body, (covers, counts, seeds),
         (seed_ids.astype(jnp.int32), rows))
     return covers, counts, seeds
+
+
+def bucket_insert_stream_ref(seed_ids: jnp.ndarray, rows: jnp.ndarray,
+                             covers: jnp.ndarray, counts: jnp.ndarray,
+                             seeds: jnp.ndarray, thresholds: jnp.ndarray):
+    """Arrival-order fold of the chunk oracle over an [R, C] stream:
+    the oracle for ``bucket_insert_stream_pallas``.  Chunking is
+    semantically invisible — this is the same fold as flattening the
+    stream to [R*C] and running ``bucket_insert_chunk_ref`` once.
+
+    Returns (covers, counts, seeds) updated.
+    """
+
+    def body(state, x):
+        ids_c, rows_c = x
+        return bucket_insert_chunk_ref(ids_c, rows_c, *state,
+                                       thresholds), None
+
+    (covers, counts, seeds), _ = jax.lax.scan(
+        body, (covers, counts, seeds),
+        (seed_ids.astype(jnp.int32), rows))
+    return covers, counts, seeds

@@ -12,7 +12,6 @@ import argparse
 import dataclasses
 import json
 
-import numpy as np
 
 from repro.configs import get_config
 from repro.configs.shapes import SHAPES

@@ -57,11 +57,17 @@ def main(argv=None):
     ap.add_argument("--use-kernel", action="store_true",
                     help="route the receiver through the fused "
                          "chunk-insertion Pallas kernel")
-    ap.add_argument("--chunk-size", type=int, default=0,
-                    help="receiver insertion chunk (0 = whole stream)")
+    ap.add_argument("--chunk-size", default="0",
+                    help="receiver insertion chunk: a candidate count "
+                         "(>= the stream length forces one whole-stream "
+                         "chunk), 'auto' = solve from the VMEM budget, "
+                         "or 0 = default ('auto' with --use-kernel, "
+                         "whole stream otherwise)")
     ap.add_argument("--eval-sims", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    chunk_size = (args.chunk_size if args.chunk_size == "auto"
+                  else int(args.chunk_size) or None)
 
     g = make_graph(args.graph, args.n, args.avg_deg, args.seed)
     n = g.num_vertices
@@ -81,7 +87,7 @@ def main(argv=None):
             max_degree=g.max_in_degree(), model=args.model,
             delta=args.delta, alpha_trunc=alpha, aggregate=args.aggregate,
             use_kernel=args.use_kernel,
-            chunk_size=args.chunk_size or None)
+            chunk_size=chunk_size)
         out = jax.jit(fn)(nbr, prob, wt, key)
         seeds = np.asarray(out.seeds)
         print(f"[im] m={m} theta={theta} coverage={int(out.coverage)} "

@@ -7,15 +7,12 @@ provides patch embeddings, both [B, *, d_model] bf16.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.shapes import ShapeCell
-from repro.models import transformer as tfm
 from repro.models.common import ModelConfig
 from repro.optim import adamw
 from repro.train import steps as steps_lib

@@ -11,7 +11,6 @@ stack; noted as a §Perf candidate).
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -2,10 +2,9 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.models import encdec as encdec_lib

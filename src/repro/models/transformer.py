@@ -15,9 +15,8 @@ Public entry points (used by the registry in model.py):
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp

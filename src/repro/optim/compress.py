@@ -14,7 +14,7 @@ is an opt-in launcher flag for bandwidth-constrained multi-pod runs.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

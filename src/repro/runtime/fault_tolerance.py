@@ -25,7 +25,6 @@ import math
 import time
 from typing import Callable, Optional
 
-import numpy as np
 
 
 @dataclasses.dataclass

@@ -7,8 +7,7 @@ sequence; remat policy comes from the model config.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -1,13 +1,17 @@
 """Parity + state-equivalence tests for the fused chunked
-streaming-receiver kernel (``bucket_insert_chunk_pallas``)."""
+streaming-receiver kernel (``bucket_insert_chunk_pallas``) and the
+double-buffered multi-chunk pipelined kernel
+(``bucket_insert_stream_pallas``)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import bitset, streaming
+from repro.core import streaming
 from repro.kernels import ref
-from repro.kernels.bucket_insert import bucket_insert_chunk_pallas
+from repro.kernels.bucket_insert import (auto_chunk_size,
+                                         bucket_insert_chunk_pallas,
+                                         bucket_insert_stream_pallas)
 
 # (B, W, C, k) — W deliberately includes non-tile-aligned word counts.
 SHAPES = [
@@ -118,3 +122,159 @@ def test_fused_large_shape_sweep(b, w, c, k):
     want = ref.bucket_insert_chunk_ref(ids, rows, covers, counts, seeds,
                                        thr)
     _assert_state_equal(got, (want[0], want[1], want[2]))
+
+
+# ---- pipelined multi-chunk stream kernel ----------------------------
+
+def _random_stream(r, c, w, b, k, seed):
+    """[R, C] chunked variant of _random_problem."""
+    ids, rows, covers, counts, seeds, thr = _random_problem(
+        b, w, r * c, k, seed)
+    return (ids.reshape(r, c), rows.reshape(r, c, w), covers, counts,
+            seeds, thr)
+
+
+# num_chunks sweep per the coverage checklist; W deliberately includes
+# non-tile-aligned word counts (33, 100, 257 vs the 128-lane tile).
+@pytest.mark.parametrize("r,c,w,b,k", [
+    (1, 12, 33, 8, 4),
+    (3, 8, 100, 47, 3),
+    (3, 5, 257, 16, 2),
+    (7, 4, 33, 63, 4),
+    (7, 3, 128, 31, 8),
+])
+def test_pipelined_matches_stream_oracle(r, c, w, b, k):
+    ids, rows, covers, counts, seeds, thr = _random_stream(
+        r, c, w, b, k, seed=r * 7919 + w * 101 + b)
+    got = bucket_insert_stream_pallas(ids, rows, covers, counts, seeds,
+                                      thr, interpret=True)
+    want = ref.bucket_insert_stream_ref(ids, rows, covers, counts,
+                                        seeds, thr)
+    _assert_state_equal(got, want)
+
+
+@pytest.mark.parametrize("r", [1, 3, 7])
+def test_pipelined_matches_fused_chunk_fold(r):
+    """Folding the single-chunk kernel over the R chunks must equal
+    one pipelined stream launch, bit for bit — chunking is invisible."""
+    ids, rows, covers, counts, seeds, thr = _random_stream(
+        r, 6, 41, 21, 3, seed=1000 + r)
+    want = (covers, counts, seeds)
+    for i in range(r):
+        want = bucket_insert_chunk_pallas(ids[i], rows[i], *want, thr,
+                                          interpret=True)
+    got = bucket_insert_stream_pallas(ids, rows, covers, counts, seeds,
+                                      thr, interpret=True)
+    _assert_state_equal(got, want)
+
+
+def test_pipelined_padded_ids_straddle_chunk_boundary():
+    """-1 padding ids in the tail of chunk r and the head of chunk r+1
+    must be no-ops; the surviving candidates insert in arrival order
+    exactly as in the unpadded flat stream."""
+    r, c, w, b, k = 3, 4, 17, 9, 3
+    ids, rows, covers, counts, seeds, thr = _random_stream(
+        r, c, w, b, k, seed=42)
+    ids = np.asarray(ids).copy()
+    # pad the boundary between chunks 0|1 and 1|2, plus the stream tail
+    ids[0, -2:] = -1
+    ids[1, 0] = -1
+    ids[1, -1] = -1
+    ids[2, 0] = -1
+    ids[2, -1] = -1
+    ids = jnp.asarray(ids)
+    got = bucket_insert_stream_pallas(ids, rows, covers, counts, seeds,
+                                      thr, interpret=True)
+    # oracle on the flat stream: -1 rows are skipped wherever they sit
+    want = ref.bucket_insert_chunk_ref(
+        ids.reshape(-1), rows.reshape(-1, w), covers, counts, seeds, thr)
+    _assert_state_equal(got, want)
+    # and the padded slots really were no-ops: zeroing their rows too
+    # changes nothing
+    rows_z = np.asarray(rows).copy().reshape(-1, w)
+    rows_z[np.asarray(ids).reshape(-1) < 0] = 0
+    got_z = bucket_insert_stream_pallas(
+        ids, jnp.asarray(rows_z).reshape(r, c, w), covers, counts,
+        seeds, thr, interpret=True)
+    _assert_state_equal(got_z, want)
+
+
+def test_pipelined_full_bucket_survives_multichunk_stream():
+    """Regression: a bucket filled in chunk 0 must keep its seed slots
+    and counts through the rest of a multi-chunk stream, even when a
+    later chunk carries a huge-gain candidate."""
+    k, w = 1, 4
+    first = jnp.asarray([0xFFFFFFFF, 0, 0, 0], dtype=jnp.uint32)
+    huge = jnp.asarray([0, 0xFFFFFFFF, 0xFFFFFFFF, 0xFFFFFFFF],
+                       dtype=jnp.uint32)
+    zero = jnp.zeros((4,), dtype=jnp.uint32)
+    # chunk 0 fills every bucket with id 7; chunks 1..2 stream huge
+    # disjoint candidates that clear every threshold
+    rows = jnp.stack([jnp.stack([first, zero]),
+                      jnp.stack([huge, huge]),
+                      jnp.stack([huge, zero])])          # [3, 2, 4]
+    ids = jnp.asarray([[7, -1], [8, 9], [10, -1]], dtype=jnp.int32)
+    state = streaming.init_state(k, 0.077, 1.0, w)
+    got_c, got_n, got_s = bucket_insert_stream_pallas(
+        ids, rows, state.covers, state.counts, state.seeds,
+        state.thresholds, interpret=True)
+    assert (np.asarray(got_n) == 1).all()
+    assert (np.asarray(got_s)[:, 0] == 7).all()
+    np.testing.assert_array_equal(
+        np.asarray(got_c),
+        np.broadcast_to(np.asarray(first), got_c.shape))
+    streaming.finalize(
+        streaming.StreamState(got_c, got_n, got_s, state.thresholds))
+
+
+def test_insert_stream_single_pallas_call():
+    """The acceptance criterion: one pallas_call per candidate stream
+    (the scan fallback stages zero — it is pure lax)."""
+    state = streaming.init_state(5, 0.077, 10.0, 11)
+    ids = jnp.zeros((3, 4), jnp.int32)
+    rows = jnp.zeros((3, 4, 11), jnp.uint32)
+    jx = jax.make_jaxpr(
+        lambda s, i, r: streaming.insert_stream(s, i, r, k=5))(
+            state, ids, rows)
+    assert str(jx).count("pallas_call") == 1
+    jx_fb = jax.make_jaxpr(
+        lambda s, i, r: streaming.insert_stream(s, i, r, k=5,
+                                                use_kernel=False))(
+            state, ids, rows)
+    assert str(jx_fb).count("pallas_call") == 0
+
+
+def test_insert_stream_matches_flat_insert_chunk(incidence):
+    """streaming-layer equivalence: insert_stream over [R, C] chunks ==
+    insert_chunk over the flat stream, for kernel and scan fallbacks."""
+    X, _ = incidence
+    rows = jnp.asarray(X[:60])
+    ids = jnp.arange(60, dtype=jnp.int32)
+    k = 6
+    state = streaming.init_state(k, 0.077, 30.0, rows.shape[1])
+    want = streaming.insert_chunk(state, ids, rows, k, use_kernel=False)
+    ids_ch, rows_ch = streaming.chunk_stream(ids, rows, 16)  # pads to 64
+    for use_kernel in (True, False):
+        got = streaming.insert_stream(state, ids_ch, rows_ch, k,
+                                      use_kernel=use_kernel)
+        for g, e, name in zip(got, want, streaming.StreamState._fields):
+            np.testing.assert_array_equal(
+                np.asarray(g), np.asarray(e),
+                err_msg=f"use_kernel={use_kernel} state.{name}")
+
+
+def test_auto_chunk_size_policy():
+    """The VMEM-budget solve: multiple-of-8 floors, monotone shrink as
+    W grows, capped by the stream length, floor of 8 when the resident
+    state alone exhausts the budget."""
+    c = auto_chunk_size(63, 2048, 32)
+    assert c >= 8 and c % 8 == 0
+    assert auto_chunk_size(63, 8192, 32) <= c
+    assert auto_chunk_size(63, 2048, 32, total=64) <= 64
+    assert auto_chunk_size(63, 100000, 100) == 8
+    # double-buffer + resident state fit the budget at the solved C
+    from repro.kernels.bucket_insert import (VMEM_BUDGET_BYTES,
+                                             _padded_w)
+    _, wp = _padded_w(2048)
+    resident = 4 * (2 * 63 * wp + 2 * 63 * 32 + 4 * 63)
+    assert resident + 2 * c * wp * 4 <= VMEM_BUDGET_BYTES

@@ -1,12 +1,11 @@
 import os
-import time
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.checkpoint.store import CheckpointStore
-from repro.runtime.fault_tolerance import (PoisonStep, RunSupervisor,
+from repro.runtime.fault_tolerance import (RunSupervisor,
                                            StragglerMonitor,
                                            SupervisorConfig)
 

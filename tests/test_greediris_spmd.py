@@ -147,6 +147,79 @@ print("sparse==dense", int(outs["dense"].coverage))
     assert "sparse==dense" in out
 
 
+def test_receiver_routings_bit_identical_on_mesh():
+    """gather schedule: scan, legacy chunked scan, and the pipelined
+    kernel (explicit and 'auto' chunk_size) must all produce the same
+    seeds bit-for-bit; the kernelized ring schedule stays valid."""
+    out = run_with_devices(_PRELUDE + """
+ref_seeds = None
+for label, kw in [("scan", dict(use_kernel=False)),
+                  ("scan-chunked", dict(use_kernel=False, chunk_size=8)),
+                  ("pipelined", dict(use_kernel=True, chunk_size=8)),
+                  ("pipelined-auto", dict(use_kernel=True,
+                                          chunk_size="auto"))]:
+    fn, _, _ = greediris.build_round(
+        mesh, ("machines",), n=200, theta=512, k=8,
+        max_degree=g.max_in_degree(), **kw)
+    o = jax.jit(fn)(nbr, prob, wt, key)
+    if ref_seeds is None:
+        ref_seeds, ref_cov = np.asarray(o.seeds), int(o.coverage)
+    else:
+        np.testing.assert_array_equal(np.asarray(o.seeds), ref_seeds,
+                                      err_msg=label)
+        assert int(o.coverage) == ref_cov, label
+fn, _, _ = greediris.build_round(
+    mesh, ("machines",), n=200, theta=512, k=8,
+    max_degree=g.max_in_degree(), aggregate="pipeline", use_kernel=True)
+o = jax.jit(fn)(nbr, prob, wt, key)
+assert int(o.coverage) > 0
+print("routings identical", ref_cov)
+""")
+    assert "routings identical" in out
+
+
+def test_gather_receiver_issues_one_stream_call(monkeypatch):
+    """Acceptance criterion: under the gather schedule with use_kernel,
+    the whole m*kk candidate stream goes through exactly ONE
+    insert_stream -> bucket_insert_stream pallas_call at trace time
+    (and zero per-chunk bucket_insert_chunk calls)."""
+    import jax
+    import numpy as np
+    from repro.core import greediris
+    from repro.graphs import generators
+    from repro.graphs.csr import padded_adjacency
+    from repro.kernels import ops
+    from repro.runtime.jaxcompat import make_mesh
+
+    calls = {"stream": 0, "chunk": 0}
+    real_stream = ops.bucket_insert_stream
+    real_chunk = ops.bucket_insert_chunk
+
+    def count_stream(*a, **kw):
+        calls["stream"] += 1
+        return real_stream(*a, **kw)
+
+    def count_chunk(*a, **kw):
+        calls["chunk"] += 1
+        return real_chunk(*a, **kw)
+
+    monkeypatch.setattr(ops, "bucket_insert_stream", count_stream)
+    monkeypatch.setattr(ops, "bucket_insert_chunk", count_chunk)
+
+    g = generators.erdos_renyi(64, 6.0, seed=3)
+    nbr, prob, wt = padded_adjacency(g)
+    mesh = make_mesh((1,), ("machines",))
+    # odd sizes -> insert_stream's jit cache cannot have this trace yet
+    fn, _, _ = greediris.build_round(
+        mesh, ("machines",), n=64, theta=96, k=3,
+        max_degree=g.max_in_degree(), use_kernel=True, chunk_size=1)
+    out = jax.jit(fn)(nbr, prob, wt, jax.random.key(5))
+    assert int(out.coverage) > 0
+    assert calls["stream"] == 1, calls
+    assert calls["chunk"] == 0, calls
+    assert np.asarray(out.seeds).shape == (3,)
+
+
 def test_ripples_unroll_k_matches_loop():
     out = run_with_devices(_PRELUDE + """
 fa, _ = greediris.build_ripples_round(mesh, ("machines",), n=200,

@@ -1,4 +1,3 @@
-import itertools
 
 import jax
 import jax.numpy as jnp
@@ -77,12 +76,12 @@ def test_streaming_kernel_path(incidence):
     assert int(cov_a) == int(cov_b)
 
 
-@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("receiver", ["scan", "fused", "pipelined"])
 @settings(max_examples=8, deadline=None)
 @given(st.integers(6, 14), st.integers(16, 64), st.integers(1, 4),
        st.integers(0, 2**31))
-def test_streaming_guarantee_vs_greedy(use_kernel, n, theta, k, seed):
-    """McGregor-Vu for both receiver paths: streamed coverage
+def test_streaming_guarantee_vs_greedy(receiver, n, theta, k, seed):
+    """McGregor-Vu for all three receiver paths: streamed coverage
     >= (1/2 - delta) * greedy coverage, and finalize returns the
     argmax bucket."""
     delta = 0.077
@@ -94,7 +93,8 @@ def test_streaming_guarantee_vs_greedy(use_kernel, n, theta, k, seed):
         return
     ids = jnp.arange(n, dtype=jnp.int32)
     _, cov, state = streaming.streaming_maxcover(
-        ids, rows, k, delta, jnp.float32(lower), use_kernel=use_kernel)
+        ids, rows, k, delta, jnp.float32(lower), receiver=receiver,
+        chunk_size=8 if receiver == "pipelined" else None)
     greedy = maxcover.greedy_maxcover(rows, k)
     # greedy >= (1-1/e) OPT >= OPT/2, so this is the practical bound
     # the paper reports (streaming within ~half of greedy).
@@ -109,13 +109,13 @@ def test_streaming_guarantee_vs_greedy(use_kernel, n, theta, k, seed):
     assert int(cov2) == int(cov)
 
 
-@pytest.mark.parametrize("use_kernel", [False, True])
-def test_full_bucket_seed_slots_untouched(use_kernel):
-    """Regression: once a bucket holds k seeds, a later candidate —
-    even with a huge marginal gain clearing every threshold — must be
-    rejected, leaving seed slots and counts untouched (the
-    clip(counts, k-1) write slot is only reachable via accept, which
-    requires counts < k)."""
+@pytest.mark.parametrize("receiver", ["scan", "fused", "pipelined"])
+def test_full_bucket_seed_slots_untouched(receiver):
+    """Regression on all three receiver paths: once a bucket holds k
+    seeds, a later candidate — even with a huge marginal gain clearing
+    every threshold — must be rejected, leaving seed slots and counts
+    untouched (the clip(counts, k-1) write slot is only reachable via
+    accept, which requires counts < k)."""
     k, w = 1, 4
     first = jnp.asarray([0xFFFFFFFF, 0, 0, 0], dtype=jnp.uint32)
     # disjoint from `first`, gain 96 > gain 32 of the first row
@@ -125,8 +125,14 @@ def test_full_bucket_seed_slots_untouched(use_kernel):
     ids = jnp.asarray([7, 8], dtype=jnp.int32)
     # lower=1 -> every threshold guess_b/(2k) <= ~1, both rows clear it
     state = streaming.init_state(k, 0.077, 1.0, w)
-    state = streaming.insert_chunk(state, ids, rows, k,
-                                   use_kernel=use_kernel)
+    if receiver == "pipelined":
+        # [2, 1] chunks: the filled bucket and the huge candidate sit
+        # on opposite sides of a chunk boundary
+        state = streaming.insert_stream(state, ids[:, None],
+                                        rows[:, None, :], k)
+    else:
+        state = streaming.insert_chunk(state, ids, rows, k,
+                                       use_kernel=(receiver == "fused"))
     counts = np.asarray(state.counts)
     seeds = np.asarray(state.seeds)
     assert (counts == 1).all()          # every bucket filled by row 0
