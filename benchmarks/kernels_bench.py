@@ -160,6 +160,62 @@ def bench_receiver(fast: bool):
            f"cpu_mode=interpret-emulation")
 
 
+def bench_sender(fast: bool):
+    """Sender (S3) greedy max-k-cover: scan vs fused-pick vs resident.
+
+    Launch / HBM-traffic model for one greedy solve of k picks over
+    [n, W] rows (words; x4 for bytes):
+
+      scan      k launches, k*(n*W + 2n + 2W)  (full sweep + [n] gain
+                                                vector round-trip +
+                                                covered round-trip per
+                                                pick)
+      fused     k launches, k*(n*W + 2W)       (gain sweep + blockwise
+                                                argmax fused; the gain
+                                                vector never
+                                                materializes)
+      resident  1 launch,   k*(n*W + W)        (row stream re-read +
+                                                winner re-gather per
+                                                pick; covered / picked
+                                                / seeds stay in VMEM
+                                                for the whole solve)
+
+    CPU wall times below (the kernel paths run interpret-emulated);
+    the roofline columns carry the HBM-traffic model the kernels
+    target on TPU.
+    """
+    from repro.core import maxcover
+    rng = np.random.default_rng(2)
+    n, w, k = (1024, 64, 8) if fast else (8192, 512, 32)
+    rows = jnp.asarray(rng.integers(0, 2**32, (n, w), dtype=np.uint32)
+                       & rng.integers(0, 2**32, (n, w), dtype=np.uint32))
+
+    times = {}
+    for solver in ("scan", "fused", "resident"):
+        times[solver] = timeit(
+            lambda r, s=solver: maxcover.greedy_maxcover(r, k, solver=s),
+            rows)
+
+    scan_words = k * (n * w + 2 * n + 2 * w)
+    fused_words = k * (n * w + 2 * w)
+    res_words = k * (n * w + w)
+    model = {
+        "scan": (scan_words, k, ""),
+        "fused": (fused_words, k,
+                  f"hbm_traffic_ratio={scan_words/fused_words:.2f}x "
+                  f"cpu_mode=interpret-emulation"),
+        "resident": (res_words, 1,
+                     f"hbm_traffic_ratio={scan_words/res_words:.2f}x "
+                     f"vs_fused={fused_words/res_words:.2f}x "
+                     f"cpu_mode=interpret-emulation"),
+    }
+    for solver, (words, launches, extra) in model.items():
+        record(f"maxcover/sender_{solver}/n={n},w={w},k={k}",
+               times[solver] * 1e6,
+               f"tpu_roofline_target_us={words*4/HBM_BW*1e6:.2f} "
+               f"launches={launches}" + (f" {extra}" if extra else ""))
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", default=None, metavar="OUT",
@@ -180,6 +236,7 @@ def main(argv=None):
     for _ in range(2 if _GATE_MODE else 1):
         bench_coverage(args.fast)
         bench_receiver(args.fast)
+        bench_sender(args.fast)
     calib = min(calib, calibration_us())
     for name, row in _RESULTS.items():
         emit(name, float(row["us"]), row["derived"])

@@ -12,6 +12,18 @@ This is the paper's §3.4 workflow mapped onto TPU-native collectives
                       RandGreedi uniform partition).
   S3 senders        — vectorized greedy max-k-cover per shard; the first
                       ceil(alpha*k) seed rows form the truncated payload.
+                      Three solver paths (`solver=`), all bit-identical:
+                      * "scan":     one full gain sweep + argmax per
+                        pick (k XLA launches, [n] gain vector and [W]
+                        covered mask round-trip HBM every pick);
+                      * "fused":    one `best_gain_index` pallas_call
+                        per pick (gain sweep + blockwise argmax fused;
+                        the gain vector never materializes);
+                      * "resident": the whole k-pick greedy loop in ONE
+                        pallas_call (`kernels.greedy_pick`) — covered/
+                        picked/seeds/gains VMEM-resident throughout,
+                        rows double-buffered HBM->VMEM per tile, winner
+                        row re-gathered by a single-row DMA.
   S4 receiver       — replicated streaming aggregation.  Two schedules:
                       * "gather":   one all_gather of all payloads, then
                         a streaming pass (2 collective steps total —
@@ -71,13 +83,20 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
                 max_steps: int = 32, sample_chunks: int = 1,
                 use_kernel: bool = False, shuffle: str = "dense",
                 est_rrr_len: float = 16.0,
-                chunk_size: int | str | None = None):
+                chunk_size: int | str | None = None,
+                solver: str | None = None):
     """Build the jittable distributed round fn(nbr, prob, wt, key).
 
     The graph (padded reverse adjacency [n_pad, d]) is replicated on
     every device — the paper's setup ("the input graph is loaded on all
     machines").  Returns a function suitable for jax.jit with the given
     mesh, and the padded vertex count.
+
+    solver: S3 sender path — "scan" | "fused" | "resident" (see the
+    module docstring; all bit-identical).  None defaults from the
+    deprecated ``use_kernel`` bool ("fused" when True, "scan"
+    otherwise); ``use_kernel`` also still routes the S4 receiver
+    through its fused/pipelined kernels.
 
     chunk_size: receiver insertion granularity under "gather": the
     [m*kk] gathered stream is split into ceil(m*kk / chunk_size)
@@ -115,6 +134,10 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
         raise ValueError(
             f"chunk_size must be a positive candidate count, None "
             f"(whole stream), or 'auto', got {chunk_size}")
+    # use_kernel=False is the bool's default (not "unset"), so only a
+    # True value routes through the deprecated-alias path (and warns);
+    # it keeps kernelizing the S4 receiver either way.
+    solver = maxcover.resolve_solver(solver, use_kernel or None)
     axes = tuple(axes)
     m = _axis_size(mesh, axes)
     n_pad = ((n + m - 1) // m) * m
@@ -221,7 +244,7 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
                 contrib, mode="drop")
 
         # --- S3: local greedy (sender) ---
-        sol = maxcover.greedy_maxcover(x_s, k, use_kernel)
+        sol = maxcover.greedy_maxcover(x_s, k, solver=solver)
         local_ids = jnp.where(
             sol.seeds >= 0, perm[pid * per + jnp.clip(sol.seeds, 0)], -1)
         sent_ids = local_ids[:kk]

@@ -31,15 +31,25 @@ class IMMResult(NamedTuple):
     lb: float
 
 
-def greedy_selector(rows, k, key):
-    sol = maxcover.greedy_maxcover(rows, k)
-    return sol.seeds, sol.coverage
+def make_greedy_selector(solver: str = "scan") -> Selector:
+    """Sequential greedy selector with an explicit max-k-cover solver
+    path ("scan" | "fused" | "resident"; all bit-identical)."""
+    def sel(rows, k, key):
+        sol = maxcover.greedy_maxcover(rows, k, solver=solver)
+        return sol.seeds, sol.coverage
+    return sel
+
+
+# The historical default selector — the scan-path instance of the
+# factory above.
+greedy_selector: Selector = make_greedy_selector()
 
 
 def make_randgreedi_selector(m: int, aggregator: str = "streaming",
                              delta: float = 0.077,
                              alpha_trunc: float = 1.0,
-                             use_kernel: bool = False) -> Selector:
+                             use_kernel: bool = False,
+                             solver: str | None = None) -> Selector:
     def sel(rows, k, key):
         n = rows.shape[0]
         pad = (-n) % m
@@ -47,7 +57,8 @@ def make_randgreedi_selector(m: int, aggregator: str = "streaming",
             rows = jnp.pad(rows, ((0, pad), (0, 0)))
         res = randgreedi.randgreedi_maxcover(
             rows, key, m=m, k=k, aggregator=aggregator, delta=delta,
-            alpha_trunc=alpha_trunc, use_kernel=use_kernel)
+            alpha_trunc=alpha_trunc, use_kernel=use_kernel,
+            solver=solver)
         seeds = jnp.where(res.seeds < n, res.seeds, -1)
         return seeds, res.coverage
     return sel
@@ -66,14 +77,19 @@ def _round32(x: float) -> int:
 def imm(g: CSRGraph, k: int, eps: float, key, *, model: str = "IC",
         ell: float = 1.0, selector: Optional[Selector] = None,
         max_theta: int = 1 << 16, max_steps: int = 32,
-        theta0: Optional[int] = None) -> IMMResult:
+        theta0: Optional[int] = None,
+        solver: str = "scan") -> IMMResult:
     """Run IMM and return the final seed set.
 
     max_theta caps the sampling effort so huge lambda* values (tiny
     eps, small graphs) stay tractable in tests/benchmarks; the cap is
     reported so callers see when it binds.
+
+    solver: max-k-cover path of the default greedy selector ("scan" |
+    "fused" | "resident"); ignored when an explicit ``selector`` is
+    passed (selectors carry their own solver choice).
     """
-    selector = selector or greedy_selector
+    selector = selector or make_greedy_selector(solver)
     n = g.num_vertices
     nbr, prob, wt = padded_adjacency(g)
     ell = theory.adjust_ell(n, k, ell)

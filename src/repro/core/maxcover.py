@@ -1,17 +1,34 @@
 """Max-k-cover solvers over packed incidence rows.
 
 ``greedy_maxcover`` is the jit-compatible vectorized greedy used on
-"local machines" (shards) inside GreediRIS: each of the k iterations is
-one fused marginal-gain sweep (the Pallas coverage kernel) + argmax.
-On TPU this memory-bound full sweep beats heap-based lazy greedy — no
+"local machines" (shards) inside GreediRIS.  Three solver paths share
+bit-identical semantics (seeds, rows, covered, gains — including the
+lowest-index argmax tie-break), mirroring the streaming receiver's
+``receiver="scan"|"fused"|"pipelined"`` triad:
+
+  * ``solver="scan"`` — each of the k iterations is one full
+    marginal-gain sweep + jnp.argmax (the reference/CPU path);
+  * ``solver="fused"`` — each pick is one ``best_gain_index`` Pallas
+    launch (gain sweep + blockwise argmax fused; the [n] gain vector
+    never round-trips HBM);
+  * ``solver="resident"`` — the whole greedy loop is ONE pallas_call
+    (``repro.kernels.greedy_pick``): covered/picked/seeds/gains stay
+    VMEM-resident across all k picks and the rows stream through a
+    double-buffered VMEM tile.
+
+On TPU these memory-bound full sweeps beat heap-based lazy greedy — no
 pointer chasing, same words touched — which is our TPU adaptation of
 the paper's Algorithm 2 (lazy greedy is kept as a NumPy oracle for
 equivalence tests: both achieve identical coverage).
+
+``use_kernel`` is a deprecated alias: True maps to ``solver="fused"``,
+False to ``solver="scan"``.
 """
 from __future__ import annotations
 
 import functools
 import heapq
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -19,6 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitset
+
+SOLVERS = ("scan", "fused", "resident")
 
 
 class CoverSolution(NamedTuple):
@@ -29,30 +48,74 @@ class CoverSolution(NamedTuple):
     gains: jnp.ndarray      # int32 [k] marginal gain at each pick
 
 
-def _gain_fn(use_kernel: bool):
-    if use_kernel:
-        from repro.kernels import ops as kops
-        return kops.marginal_gain
-    return bitset.marginal_gain
+def resolve_solver(solver: str | None,
+                   use_kernel: bool | None = None,
+                   default: str = "scan") -> str:
+    """Resolve the solver triad from the new ``solver=`` argument and
+    the deprecated ``use_kernel`` bool (True -> "fused", False ->
+    "scan").  ``solver`` wins when both are given — the alias is then
+    inert, so the deprecation warning only fires when ``use_kernel``
+    actually decides the path (keeps callers that already migrated,
+    like ``im_driver``, from warning twice)."""
+    if use_kernel is not None and solver is None:
+        warnings.warn(
+            "use_kernel is deprecated; pass solver='fused' (was "
+            "use_kernel=True) or solver='scan' (was use_kernel=False)",
+            DeprecationWarning, stacklevel=3)
+        solver = "fused" if use_kernel else "scan"
+    if solver is None:
+        solver = default
+    if solver not in SOLVERS:
+        raise ValueError(
+            f"unknown solver {solver!r}; expected one of {SOLVERS}")
+    return solver
 
 
-@functools.partial(jax.jit, static_argnames=("k", "use_kernel"))
 def greedy_maxcover(rows: jnp.ndarray, k: int,
-                    use_kernel: bool = False) -> CoverSolution:
+                    use_kernel: bool | None = None,
+                    solver: str | None = None) -> CoverSolution:
     """Vectorized greedy max-k-cover.
 
     rows: uint32 [n, W] packed covering sets. Returns the greedy
-    (1 - 1/e)-approximate solution.
+    (1 - 1/e)-approximate solution.  ``solver`` picks the execution
+    path (see module docstring); all paths are bit-identical.
+
+    Thin un-jitted shim: the solver triad (and the deprecated
+    ``use_kernel`` alias, with its warning) resolves eagerly here so
+    the DeprecationWarning points at the caller and fires on every
+    call, not only at trace time; the jitted body is dispatched with
+    the resolved solver as a static argument.
     """
+    return _greedy_maxcover(rows, k, resolve_solver(solver, use_kernel))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "solver"))
+def _greedy_maxcover(rows: jnp.ndarray, k: int,
+                     solver: str) -> CoverSolution:
     n, w = rows.shape
-    gain = _gain_fn(use_kernel)
+
+    if solver == "resident":
+        from repro.kernels import ops as kops
+        seeds, sel_rows, covered, gains = kops.greedy_maxcover_resident(
+            rows, k)
+        return CoverSolution(seeds, sel_rows, covered,
+                             bitset.coverage_size(covered), gains)
+
+    if solver == "fused":
+        from repro.kernels import ops as kops
+
+        def pick(covered, picked_mask):
+            return kops.best_gain_index(rows, covered, picked_mask)
+    else:
+        def pick(covered, picked_mask):
+            g = bitset.marginal_gain(rows, covered)
+            g = jnp.where(picked_mask, -1, g)
+            best = jnp.argmax(g)
+            return g[best], best
 
     def body(i, state):
         covered, seeds, sel_rows, picked_mask, gains = state
-        g = gain(rows, covered)
-        g = jnp.where(picked_mask, -1, g)
-        best = jnp.argmax(g)
-        best_gain = g[best]
+        best_gain, best = pick(covered, picked_mask)
         take = best_gain > 0
         row = jnp.where(take, rows[best], jnp.zeros((w,), bitset.WORD_DTYPE))
         covered = covered | row
@@ -73,6 +136,16 @@ def greedy_maxcover(rows: jnp.ndarray, k: int,
                          bitset.coverage_size(covered), gains)
 
 
+def _popcount_words(words) -> int:
+    """Word-safe host-side popcount of a packed row: each word goes
+    through a Python int (``bin(...).count``), so uint64 words with the
+    high bit set never detour through float the way a vectorized
+    ``np.sum`` of object arrays can.  Shared by the lazy-greedy oracle
+    and ``coverage_of``."""
+    return sum(bin(int(x)).count("1")
+               for x in np.asarray(words, dtype=np.uint64).ravel())
+
+
 def lazy_greedy_maxcover_np(rows: np.ndarray, k: int) -> tuple[list, int]:
     """Paper Algorithm 2 — heap-based lazy greedy (NumPy oracle).
 
@@ -80,19 +153,15 @@ def lazy_greedy_maxcover_np(rows: np.ndarray, k: int) -> tuple[list, int]:
     vectorized greedy matches the sequential lazy greedy coverage.
     """
     n, w = rows.shape
-    pop = np.vectorize(lambda x: bin(x).count("1"))
-
-    def count(words):
-        return int(np.sum([bin(int(x)).count("1") for x in words]))
-
     covered = np.zeros(w, dtype=np.uint64)
-    heap = [(-count(rows[v]), 0, v) for v in range(n)]  # (-gain, stamp, v)
-    heapq.heapify(heap)
+    heap = [(-_popcount_words(rows[v]), 0, v) for v in range(n)]
+    heapq.heapify(heap)                           # (-gain, stamp, v)
     seeds: list[int] = []
     stamp = 0
     while heap and len(seeds) < k:
         neg_gain, s, v = heapq.heappop(heap)
-        fresh = count(np.asarray(rows[v], dtype=np.uint64) & ~covered)
+        fresh = _popcount_words(
+            np.asarray(rows[v], dtype=np.uint64) & ~covered)
         if -neg_gain == fresh or (heap and fresh >= -heap[0][0]):
             if fresh == 0:
                 break
@@ -101,7 +170,7 @@ def lazy_greedy_maxcover_np(rows: np.ndarray, k: int) -> tuple[list, int]:
             stamp += 1
         else:
             heapq.heappush(heap, (-fresh, stamp, v))
-    return seeds, count(covered)
+    return seeds, _popcount_words(covered)
 
 
 def coverage_of(rows: np.ndarray, seeds) -> int:
@@ -110,4 +179,4 @@ def coverage_of(rows: np.ndarray, seeds) -> int:
     for s in seeds:
         if s >= 0:
             covered |= np.asarray(rows[int(s)], dtype=np.uint64)
-    return int(np.sum([bin(int(x)).count("1") for x in covered]))
+    return _popcount_words(covered)

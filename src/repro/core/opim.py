@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import maxcover
-from repro.core.imm import Selector, greedy_selector, _round32
+from repro.core.imm import Selector, make_greedy_selector, _round32
 from repro.core.rrr import sample_incidence
 from repro.graphs.csr import CSRGraph, padded_adjacency
 
@@ -51,11 +51,14 @@ def _sigma_upper(cov_ub: float, theta: int, n: int, delta: float) -> float:
 def opim(g: CSRGraph, k: int, eps: float, key, *, model: str = "IC",
          selector: Optional[Selector] = None, solver_alpha: float = None,
          theta0: int = 256, max_theta: int = 1 << 16, max_steps: int = 32,
-         fail_prob: float = 1.0 / 128.0) -> OPIMResult:
+         fail_prob: float = 1.0 / 128.0,
+         solver: str = "scan") -> OPIMResult:
     """OPIM-C driver.  ``solver_alpha`` is the worst-case approximation
     of the selector (used for the OPT upper bound); defaults to the
-    greedy 1 - 1/e."""
-    selector = selector or greedy_selector
+    greedy 1 - 1/e.  ``solver`` picks the max-k-cover path of the
+    default greedy selector ("scan" | "fused" | "resident"); ignored
+    when an explicit ``selector`` is passed."""
+    selector = selector or make_greedy_selector(solver)
     if solver_alpha is None:
         solver_alpha = 1.0 - 1.0 / math.e
     n = g.num_vertices

@@ -36,18 +36,42 @@ def partition_permutation(n: int, key) -> jnp.ndarray:
     return jax.random.permutation(key, n)
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "m", "k", "aggregator", "delta", "alpha_trunc", "use_kernel"))
 def randgreedi_maxcover(rows: jnp.ndarray, key, *, m: int, k: int,
                         aggregator: str = "streaming", delta: float = 0.077,
                         alpha_trunc: float = 1.0,
-                        use_kernel: bool = False) -> RandGreediResult:
+                        use_kernel: bool = False,
+                        solver: str | None = None) -> RandGreediResult:
     """RandGreedi max-k-cover over uint32 rows [n, W].
 
     aggregator: "greedy" (offline lazy-greedy equivalent, Alg. 4 line 4)
       or "streaming" (Alg. 5).  alpha_trunc < 1 enables GreediRIS-trunc:
       only the first ceil(alpha*k) local seeds reach the aggregator.
+
+    solver: greedy max-k-cover path for the local machines (and the
+      "greedy" aggregator) — "scan" | "fused" | "resident", all
+      bit-identical (see ``maxcover.greedy_maxcover``).  None defaults
+      from the deprecated ``use_kernel`` bool ("fused" when True);
+      ``use_kernel`` also still routes the streaming aggregator through
+      its fused receiver kernel.
+
+    Un-jitted shim (like ``maxcover.greedy_maxcover``): the solver —
+    and the ``use_kernel`` DeprecationWarning, when the alias decides
+    it — resolves eagerly on every call, pointing at the caller, then
+    dispatches to the jitted body with ``solver`` static.
     """
+    return _randgreedi_maxcover(
+        rows, key, m=m, k=k, aggregator=aggregator, delta=delta,
+        alpha_trunc=alpha_trunc, use_kernel=use_kernel,
+        solver=maxcover.resolve_solver(solver, use_kernel or None))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "m", "k", "aggregator", "delta", "alpha_trunc", "use_kernel",
+    "solver"))
+def _randgreedi_maxcover(rows: jnp.ndarray, key, *, m: int, k: int,
+                         aggregator: str, delta: float,
+                         alpha_trunc: float, use_kernel: bool,
+                         solver: str) -> RandGreediResult:
     n, w = rows.shape
     perm = partition_permutation(n, key)
     per = n // m  # vertices per machine (n padded by caller if needed)
@@ -56,7 +80,7 @@ def randgreedi_maxcover(rows: jnp.ndarray, key, *, m: int, k: int,
 
     # --- local greedy on each machine (vmapped = "in parallel") ---
     local = jax.vmap(
-        lambda r: maxcover.greedy_maxcover(r, k, use_kernel))(local_rows)
+        lambda r: maxcover.greedy_maxcover(r, k, solver=solver))(local_rows)
     local_ids = jnp.where(
         local.seeds >= 0,
         jnp.take_along_axis(assign, jnp.clip(local.seeds, 0), axis=1),
@@ -70,7 +94,7 @@ def randgreedi_maxcover(rows: jnp.ndarray, key, *, m: int, k: int,
 
     # --- global aggregation ---
     if aggregator == "greedy":
-        sol = maxcover.greedy_maxcover(sent_rows, k, use_kernel)
+        sol = maxcover.greedy_maxcover(sent_rows, k, solver=solver)
         g_ids = jnp.where(sol.seeds >= 0, sent_ids[jnp.clip(sol.seeds, 0)],
                           -1)
         g_cov = sol.coverage

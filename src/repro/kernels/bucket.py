@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import gain_core
+
 BLOCK_W = 1024
 
 
@@ -27,11 +29,8 @@ def _kernel(row_ref, cov_ref, out_ref):
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    row = row_ref[...]                 # [1, BW]
-    cov = cov_ref[...]                 # [B, BW]
-    fresh = row & ~cov
-    pc = jax.lax.population_count(fresh).astype(jnp.int32)
-    out_ref[...] += jnp.sum(pc, axis=1, keepdims=True)
+    # [1, BW] row tile vs [B, BW] covers -> [B, 1] partial gains
+    out_ref[...] += gain_core.gain_tile_sum(row_ref[...], cov_ref[...])
 
 
 @functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
@@ -40,12 +39,11 @@ def bucket_gains_pallas(row: jnp.ndarray, covers: jnp.ndarray,
                         interpret: bool = False) -> jnp.ndarray:
     """row: uint32 [W]; covers: uint32 [B, W] -> int32 [B] gains."""
     b, w = covers.shape
-    bw = min(block_w, max(128, w))
-    pad_w = (-w) % bw
-    if pad_w:
-        row = jnp.pad(row, (0, pad_w))
-        covers = jnp.pad(covers, ((0, 0), (0, pad_w)))
-    wp = covers.shape[1]
+    bw = gain_core.effective_block(w, block_w, gain_core.LANE)
+    wp = gain_core.padded_size(w, bw)
+    if wp != w:
+        row = jnp.pad(row, (0, wp - w))
+        covers = jnp.pad(covers, ((0, 0), (0, wp - w)))
     out = pl.pallas_call(
         _kernel,
         grid=(wp // bw,),

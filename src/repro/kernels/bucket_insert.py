@@ -52,6 +52,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import gain_core
+
 BLOCK_W = 512
 
 # Per-core VMEM the auto chunk policy budgets against (v5e ~16 MiB,
@@ -62,8 +64,8 @@ _WORD_BYTES = 4
 
 def _padded_w(w: int, block_w: int = BLOCK_W) -> tuple[int, int]:
     """(effective block_w, W padded up to a whole number of blocks)."""
-    bw = min(block_w, max(128, w))
-    return bw, w + ((-w) % bw)
+    bw = gain_core.effective_block(w, block_w, gain_core.LANE)
+    return bw, gain_core.padded_size(w, bw)
 
 
 def auto_chunk_size(num_buckets: int, num_words: int, k: int,
@@ -117,9 +119,7 @@ def _insert_candidates(read_id, read_row_tile, c_total, covers_ref,
             s = t * block_w
             row_t = read_row_tile(c, s)                        # [1, bw]
             cov_t = covers_ref[:, pl.ds(s, block_w)]           # [B, bw]
-            pc = jax.lax.population_count(row_t & ~cov_t)
-            return acc + jnp.sum(pc.astype(jnp.int32), axis=1,
-                                 keepdims=True)
+            return acc + gain_core.gain_tile_sum(row_t, cov_t)
 
         gains = jax.lax.fori_loop(
             0, num_word_tiles, gain_tile,

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import gain_core
+
 BLOCK_V = 128
 BLOCK_W = 512
 
@@ -34,11 +36,8 @@ def _kernel(x_ref, cov_ref, out_ref):
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    x = x_ref[...]                       # [BV, BW] uint32
-    cov = cov_ref[...]                   # [1, BW] uint32
-    fresh = x & ~cov                     # AND-NOT (bits not yet covered)
-    pc = jax.lax.population_count(fresh).astype(jnp.int32)
-    out_ref[...] += jnp.sum(pc, axis=1, keepdims=True)
+    # [BV, BW] x tile vs [1, BW] covered slice -> [BV, 1] partial gains
+    out_ref[...] += gain_core.gain_tile_sum(x_ref[...], cov_ref[...])
 
 
 @functools.partial(jax.jit, static_argnames=("block_v", "block_w",
@@ -48,14 +47,13 @@ def marginal_gain_pallas(rows: jnp.ndarray, covered: jnp.ndarray,
                          interpret: bool = False) -> jnp.ndarray:
     """rows: uint32 [n, W]; covered: uint32 [W] -> int32 [n] gains."""
     n, w = rows.shape
-    bv = min(block_v, max(8, n))
-    bw = min(block_w, max(128, w))
-    pad_n = (-n) % bv
-    pad_w = (-w) % bw
-    if pad_n or pad_w:
-        rows = jnp.pad(rows, ((0, pad_n), (0, pad_w)))
-        covered = jnp.pad(covered, (0, pad_w))
-    np_, wp = rows.shape
+    bv = gain_core.effective_block(n, block_v, gain_core.SUBLANE)
+    bw = gain_core.effective_block(w, block_w, gain_core.LANE)
+    np_ = gain_core.padded_size(n, bv)
+    wp = gain_core.padded_size(w, bw)
+    if np_ != n or wp != w:
+        rows = jnp.pad(rows, ((0, np_ - n), (0, wp - w)))
+        covered = jnp.pad(covered, (0, wp - w))
     grid = (np_ // bv, wp // bw)
     out = pl.pallas_call(
         _kernel,

@@ -15,6 +15,7 @@ from repro.kernels.bucket import bucket_gains_pallas
 from repro.kernels.bucket_insert import (bucket_insert_chunk_pallas,
                                          bucket_insert_stream_pallas)
 from repro.kernels.coverage import marginal_gain_pallas
+from repro.kernels.greedy_pick import greedy_maxcover_resident_pallas
 from repro.kernels.topk_gain import best_gain_index_pallas
 
 
@@ -32,8 +33,18 @@ def bucket_gains(row: jnp.ndarray, covers: jnp.ndarray) -> jnp.ndarray:
 
 def best_gain_index(rows: jnp.ndarray, covered: jnp.ndarray,
                     picked: jnp.ndarray):
+    """Fused marginal-gain + blockwise-argmax of one greedy pick (the
+    ``solver="fused"`` engine): no [n] gain-vector HBM round-trip."""
     return best_gain_index_pallas(rows, covered, picked,
                                   interpret=_interpret())
+
+
+def greedy_maxcover_resident(rows: jnp.ndarray, k: int):
+    """Resident greedy max-k-cover (the ``solver="resident"`` engine):
+    all k picks in ONE pallas_call, covered/picked/seeds/gains
+    VMEM-resident for the whole loop, rows double-buffered HBM->VMEM."""
+    return greedy_maxcover_resident_pallas(rows, k,
+                                           interpret=_interpret())
 
 
 def bucket_insert_chunk(seed_ids: jnp.ndarray, rows: jnp.ndarray,

@@ -5,6 +5,15 @@ vector; fusing the reduction saves the [n] int32 round-trip to HBM.
 The kernel emits per-vertex-block (max_gain, arg) pairs; the final
 O(n / BLOCK_V) reduction happens in jnp.  Already-picked vertices are
 masked with gain -1 inside the kernel.
+
+This is the per-pick engine of ``maxcover.greedy_maxcover``'s
+``solver="fused"`` path (O(k) launches, no gain-vector HBM traffic);
+the gain tile body is the shared ``gain_core`` contraction.  The
+tie-break is the same lowest-index rule as a full jnp.argmax: blocks
+are scanned in ascending order and jnp.argmax inside a block already
+prefers the lowest index, so the blockwise reduction below (argmax of
+per-block maxima, again lowest block on ties) composes to the global
+lowest index.
 """
 from __future__ import annotations
 
@@ -14,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import gain_core
 
 BLOCK_V = 128
 BLOCK_W = 512
@@ -28,9 +39,7 @@ def _kernel(x_ref, cov_ref, picked_ref, best_ref, arg_ref, acc_ref):
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    fresh = x_ref[...] & ~cov_ref[...]
-    pc = jax.lax.population_count(fresh).astype(jnp.int32)
-    acc_ref[...] += jnp.sum(pc, axis=1, keepdims=True)
+    acc_ref[...] += gain_core.gain_tile_sum(x_ref[...], cov_ref[...])
 
     @pl.when(j == nw - 1)
     def _reduce():
@@ -50,15 +59,14 @@ def best_gain_index_pallas(rows: jnp.ndarray, covered: jnp.ndarray,
     """rows [n, W] u32, covered [W] u32, picked [n] bool ->
     (best_gain [], best_index []) with picked rows masked out."""
     n, w = rows.shape
-    bv = min(block_v, max(8, n))
-    bw = min(block_w, max(128, w))
-    pad_n = (-n) % bv
-    pad_w = (-w) % bw
-    if pad_n or pad_w:
-        rows = jnp.pad(rows, ((0, pad_n), (0, pad_w)))
-        covered = jnp.pad(covered, (0, pad_w))
-        picked = jnp.pad(picked, (0, pad_n), constant_values=True)
-    np_, wp = rows.shape
+    bv = gain_core.effective_block(n, block_v, gain_core.SUBLANE)
+    bw = gain_core.effective_block(w, block_w, gain_core.LANE)
+    np_ = gain_core.padded_size(n, bv)
+    wp = gain_core.padded_size(w, bw)
+    if np_ != n or wp != w:
+        rows = jnp.pad(rows, ((0, np_ - n), (0, wp - w)))
+        covered = jnp.pad(covered, (0, wp - w))
+        picked = jnp.pad(picked, (0, np_ - n), constant_values=True)
     grid = (np_ // bv, wp // bw)
     best, arg = pl.pallas_call(
         _kernel,

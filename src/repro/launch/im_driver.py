@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import argparse
 import time
+import warnings
 
 import jax
 import numpy as np
@@ -54,9 +55,17 @@ def main(argv=None):
     ap.add_argument("--theta", type=int, default=0,
                     help="fixed theta (skip martingale loop)")
     ap.add_argument("--use-opim", action="store_true")
+    ap.add_argument("--solver", default=None,
+                    choices=("scan", "fused", "resident"),
+                    help="sender (S3) greedy max-k-cover path: 'scan' "
+                         "(full sweep + argmax per pick), 'fused' (one "
+                         "fused gain+argmax kernel launch per pick), or "
+                         "'resident' (all k picks in ONE pallas_call, "
+                         "state VMEM-resident); all bit-identical")
     ap.add_argument("--use-kernel", action="store_true",
-                    help="route the receiver through the fused "
-                         "chunk-insertion Pallas kernel")
+                    help="DEPRECATED: maps to --solver fused and "
+                         "additionally routes the receiver through the "
+                         "fused/pipelined insertion Pallas kernels")
     ap.add_argument("--chunk-size", default="0",
                     help="receiver insertion chunk: a candidate count "
                          "(>= the stream length forces one whole-stream "
@@ -68,6 +77,13 @@ def main(argv=None):
     args = ap.parse_args(argv)
     chunk_size = (args.chunk_size if args.chunk_size == "auto"
                   else int(args.chunk_size) or None)
+    if args.use_kernel:
+        warnings.warn(
+            "--use-kernel is deprecated: it maps to --solver fused "
+            "(sender) and keeps the kernelized receiver; pass --solver "
+            "{scan,fused,resident} explicitly",
+            DeprecationWarning)
+    solver = args.solver or ("fused" if args.use_kernel else "scan")
 
     g = make_graph(args.graph, args.n, args.avg_deg, args.seed)
     n = g.num_vertices
@@ -86,7 +102,7 @@ def main(argv=None):
             mesh, ("machines",), n=n, theta=args.theta, k=args.k,
             max_degree=g.max_in_degree(), model=args.model,
             delta=args.delta, alpha_trunc=alpha, aggregate=args.aggregate,
-            use_kernel=args.use_kernel,
+            use_kernel=args.use_kernel, solver=solver,
             chunk_size=chunk_size)
         out = jax.jit(fn)(nbr, prob, wt, key)
         seeds = np.asarray(out.seeds)
@@ -96,15 +112,16 @@ def main(argv=None):
     else:
         m = args.machines or len(jax.devices())
         sel = {
-            "greedy": imm.greedy_selector,
+            "greedy": imm.make_greedy_selector(solver),
             "ripples": imm.make_ripples_selector(m),
-            "randgreedi": imm.make_randgreedi_selector(m, "greedy"),
+            "randgreedi": imm.make_randgreedi_selector(
+                m, "greedy", solver=solver),
             "greediris": imm.make_randgreedi_selector(
                 m, "streaming", args.delta,
-                use_kernel=args.use_kernel),
+                use_kernel=args.use_kernel, solver=solver),
             "greediris-trunc": imm.make_randgreedi_selector(
                 m, "streaming", args.delta, args.alpha,
-                use_kernel=args.use_kernel),
+                use_kernel=args.use_kernel, solver=solver),
         }[args.selector]
         if args.use_opim:
             res = opim.opim(g, args.k, args.eps, key, model=args.model,

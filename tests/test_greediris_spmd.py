@@ -178,6 +178,35 @@ print("routings identical", ref_cov)
     assert "routings identical" in out
 
 
+def test_sender_solver_triad_bit_identical_on_mesh():
+    """S3 solver routing: scan, fused, and resident senders must
+    produce identical seeds through the whole distributed round, and
+    the resident sender must trace to exactly ONE pallas_call for the
+    entire greedy solve (receiver kept on the scan path so the jaxpr
+    contains only S3 kernels)."""
+    out = run_with_devices(_PRELUDE + textwrap.dedent("""
+        ref = None
+        for solver in ("scan", "fused", "resident"):
+            fn, _, _ = greediris.build_round(
+                mesh, ("machines",), n=200, theta=512, k=8,
+                max_degree=g.max_in_degree(), solver=solver)
+            o = jax.jit(fn)(nbr, prob, wt, key)
+            if ref is None:
+                ref = (np.asarray(o.seeds), int(o.coverage))
+            else:
+                np.testing.assert_array_equal(np.asarray(o.seeds),
+                                              ref[0], err_msg=solver)
+                assert int(o.coverage) == ref[1], solver
+        fn, _, _ = greediris.build_round(
+            mesh, ("machines",), n=200, theta=512, k=8,
+            max_degree=g.max_in_degree(), solver="resident")
+        jx = str(jax.make_jaxpr(fn)(nbr, prob, wt, key))
+        assert jx.count("pallas_call") == 1, jx.count("pallas_call")
+        print("solver triad identical", ref[1])
+    """))
+    assert "solver triad identical" in out
+
+
 def test_gather_receiver_issues_one_stream_call(monkeypatch):
     """Acceptance criterion: under the gather schedule with use_kernel,
     the whole m*kk candidate stream goes through exactly ONE
