@@ -161,7 +161,8 @@ def bench_receiver(fast: bool):
 
 
 def bench_sender(fast: bool):
-    """Sender (S3) greedy max-k-cover: scan vs fused-pick vs resident.
+    """Sender (S3) greedy max-k-cover: scan vs fused-pick vs resident
+    vs lazy.
 
     Launch / HBM-traffic model for one greedy solve of k picks over
     [n, W] rows (words; x4 for bytes):
@@ -179,26 +180,47 @@ def bench_sender(fast: bool):
                                                 pick; covered / picked
                                                 / seeds stay in VMEM
                                                 for the whole solve)
+      lazy      1 launch,   s*k*n*W + k*W      (only row tiles whose
+                                                VMEM-resident stale
+                                                bound can beat the
+                                                running best are
+                                                re-read; s = measured
+                                                sweep fraction
+                                                tiles_swept/(k*tiles),
+                                                1.0 on uniform gains,
+                                                << 1 on skewed)
+
+    The lazy rows carry the *measured* tiles-swept skip ratio (the
+    kernel counts the tiles it actually DMA'd + swept) — near 1.0 on
+    the uniform-random workload, well below 1.0 on the power-law
+    skewed workload, whose outputs are also checked against the scan
+    solver bit-for-bit before recording.
 
     CPU wall times below (the kernel paths run interpret-emulated);
     the roofline columns carry the HBM-traffic model the kernels
     target on TPU.
     """
-    from repro.core import maxcover
+    from repro.core import bitset, maxcover
+    from repro.kernels import lazy_greedy, ops
     rng = np.random.default_rng(2)
     n, w, k = (1024, 64, 8) if fast else (8192, 512, 32)
     rows = jnp.asarray(rng.integers(0, 2**32, (n, w), dtype=np.uint32)
                        & rng.integers(0, 2**32, (n, w), dtype=np.uint32))
 
     times = {}
-    for solver in ("scan", "fused", "resident"):
+    for solver in ("scan", "fused", "resident", "lazy"):
         times[solver] = timeit(
             lambda r, s=solver: maxcover.greedy_maxcover(r, k, solver=s),
             rows)
 
+    num_tiles = lazy_greedy.num_row_tiles(n)
+    swept = int(ops.greedy_maxcover_lazy(rows, k)[4])
+    sweep_frac = swept / (k * num_tiles)
+
     scan_words = k * (n * w + 2 * n + 2 * w)
     fused_words = k * (n * w + 2 * w)
     res_words = k * (n * w + w)
+    lazy_words = max(1, round(sweep_frac * k * n * w + k * w))
     model = {
         "scan": (scan_words, k, ""),
         "fused": (fused_words, k,
@@ -208,12 +230,43 @@ def bench_sender(fast: bool):
                      f"hbm_traffic_ratio={scan_words/res_words:.2f}x "
                      f"vs_fused={fused_words/res_words:.2f}x "
                      f"cpu_mode=interpret-emulation"),
+        "lazy": (lazy_words, 1,
+                 f"hbm_traffic_ratio={scan_words/lazy_words:.2f}x "
+                 f"vs_resident={res_words/lazy_words:.2f}x "
+                 f"tiles_swept={swept} skip_ratio={sweep_frac:.3f} "
+                 f"cpu_mode=interpret-emulation"),
     }
     for solver, (words, launches, extra) in model.items():
         record(f"maxcover/sender_{solver}/n={n},w={w},k={k}",
                times[solver] * 1e6,
                f"tpu_roofline_target_us={words*4/HBM_BW*1e6:.2f} "
                f"launches={launches}" + (f" {extra}" if extra else ""))
+
+    # --- skewed-gain workload: the lazy solver's target regime ------
+    # Power-law row weights (density of row i ~ (i+1)^-0.8): a few
+    # heavy rows dominate, so after the first full pass almost every
+    # tile's stale bound loses to the running best and is skipped.
+    density = 0.6 * (np.arange(n) + 1.0) ** -0.8
+    dense = rng.random((n, w * 32)) < density[:, None]
+    skew_rows = bitset.pack_bool_matrix(jnp.asarray(dense))
+    t_lazy_skew = timeit(
+        lambda r: maxcover.greedy_maxcover(r, k, solver="lazy"),
+        skew_rows)
+    sk = ops.greedy_maxcover_lazy(skew_rows, k)
+    want = maxcover.greedy_maxcover(skew_rows, k, solver="scan")
+    np.testing.assert_array_equal(np.asarray(sk[0]),
+                                  np.asarray(want.seeds))
+    np.testing.assert_array_equal(np.asarray(sk[3]),
+                                  np.asarray(want.gains))
+    swept_sk = int(sk[4])
+    frac_sk = swept_sk / (k * num_tiles)
+    lazy_sk_words = max(1, round(frac_sk * k * n * w + k * w))
+    record(f"maxcover/sender_lazy_skewed/n={n},w={w},k={k}",
+           t_lazy_skew * 1e6,
+           f"tpu_roofline_target_us={lazy_sk_words*4/HBM_BW*1e6:.2f} "
+           f"launches=1 vs_resident={res_words/lazy_sk_words:.2f}x "
+           f"tiles_swept={swept_sk} skip_ratio={frac_sk:.3f} "
+           f"parity=scan-exact cpu_mode=interpret-emulation")
 
 
 def main(argv=None):

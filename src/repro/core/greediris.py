@@ -12,7 +12,7 @@ This is the paper's §3.4 workflow mapped onto TPU-native collectives
                       RandGreedi uniform partition).
   S3 senders        — vectorized greedy max-k-cover per shard; the first
                       ceil(alpha*k) seed rows form the truncated payload.
-                      Three solver paths (`solver=`), all bit-identical:
+                      Four solver paths (`solver=`), all bit-identical:
                       * "scan":     one full gain sweep + argmax per
                         pick (k XLA launches, [n] gain vector and [W]
                         covered mask round-trip HBM every pick);
@@ -23,7 +23,14 @@ This is the paper's §3.4 workflow mapped onto TPU-native collectives
                         pallas_call (`kernels.greedy_pick`) — covered/
                         picked/seeds/gains VMEM-resident throughout,
                         rows double-buffered HBM->VMEM per tile, winner
-                        row re-gathered by a single-row DMA.
+                        row re-gathered by a single-row DMA;
+                      * "lazy":     the resident loop plus tile-level
+                        lazy greedy (`kernels.lazy_greedy`) — a
+                        [num_tiles] stale-upper-bound vector stays in
+                        VMEM and each pick only DMAs + re-sweeps tiles
+                        whose bound can still reach the running best
+                        (equal bounds re-sweep, keeping the lowest-
+                        index tie-break bit-exact).
   S4 receiver       — replicated streaming aggregation.  Two schedules:
                       * "gather":   one all_gather of all payloads, then
                         a streaming pass (2 collective steps total —
@@ -92,8 +99,8 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
     machines").  Returns a function suitable for jax.jit with the given
     mesh, and the padded vertex count.
 
-    solver: S3 sender path — "scan" | "fused" | "resident" (see the
-    module docstring; all bit-identical).  None defaults from the
+    solver: S3 sender path — "scan" | "fused" | "resident" | "lazy"
+    (see the module docstring; all bit-identical).  None defaults from the
     deprecated ``use_kernel`` bool ("fused" when True, "scan"
     otherwise); ``use_kernel`` also still routes the S4 receiver
     through its fused/pipelined kernels.
@@ -259,7 +266,13 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
             ids_all = lax.all_gather(sent_ids, axes, tiled=True)   # [m*kk]
             rows_all = lax.all_gather(sent_rows, axes, tiled=True)
             total = m * kk
-            if use_kernel:
+            if total == 0:
+                # Empty candidate stream (statically impossible today —
+                # kk >= 1 and m >= 1 — but chunk_stream would otherwise
+                # hand the stream kernel an R=0 grid): keep the freshly
+                # initialized state, identical to inserting nothing.
+                pass
+            elif use_kernel:
                 # Pipelined receiver: the whole gathered stream in ONE
                 # pallas_call — covers VMEM-resident across all
                 # chunks, chunk r+1's rows double-buffered HBM->VMEM

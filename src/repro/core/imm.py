@@ -33,7 +33,7 @@ class IMMResult(NamedTuple):
 
 def make_greedy_selector(solver: str = "scan") -> Selector:
     """Sequential greedy selector with an explicit max-k-cover solver
-    path ("scan" | "fused" | "resident"; all bit-identical)."""
+    path ("scan" | "fused" | "resident" | "lazy"; all bit-identical)."""
     def sel(rows, k, key):
         sol = maxcover.greedy_maxcover(rows, k, solver=solver)
         return sol.seeds, sol.coverage
@@ -86,8 +86,8 @@ def imm(g: CSRGraph, k: int, eps: float, key, *, model: str = "IC",
     reported so callers see when it binds.
 
     solver: max-k-cover path of the default greedy selector ("scan" |
-    "fused" | "resident"); ignored when an explicit ``selector`` is
-    passed (selectors carry their own solver choice).
+    "fused" | "resident" | "lazy"); ignored when an explicit
+    ``selector`` is passed (selectors carry their own solver choice).
     """
     selector = selector or make_greedy_selector(solver)
     n = g.num_vertices

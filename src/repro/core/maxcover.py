@@ -1,10 +1,10 @@
 """Max-k-cover solvers over packed incidence rows.
 
 ``greedy_maxcover`` is the jit-compatible vectorized greedy used on
-"local machines" (shards) inside GreediRIS.  Three solver paths share
+"local machines" (shards) inside GreediRIS.  Four solver paths share
 bit-identical semantics (seeds, rows, covered, gains — including the
-lowest-index argmax tie-break), mirroring the streaming receiver's
-``receiver="scan"|"fused"|"pipelined"`` triad:
+lowest-index argmax tie-break), extending the streaming receiver's
+``receiver="scan"|"fused"|"pipelined"`` triad to a quad:
 
   * ``solver="scan"`` — each of the k iterations is one full
     marginal-gain sweep + jnp.argmax (the reference/CPU path);
@@ -14,12 +14,20 @@ lowest-index argmax tie-break), mirroring the streaming receiver's
   * ``solver="resident"`` — the whole greedy loop is ONE pallas_call
     (``repro.kernels.greedy_pick``): covered/picked/seeds/gains stay
     VMEM-resident across all k picks and the rows stream through a
-    double-buffered VMEM tile.
+    double-buffered VMEM tile;
+  * ``solver="lazy"`` — the resident loop plus tile-level lazy greedy
+    (``repro.kernels.lazy_greedy``): a [num_tiles] stale-upper-bound
+    vector stays in VMEM and each pick only DMAs + re-sweeps tiles
+    whose bound can still reach the running best gain (equal bounds
+    still re-sweep, preserving the lowest-index tie-break bit-for-bit)
+    — the TPU analogue of the paper's Algorithm 2 lazy greedy, cutting
+    the resident solver's k*n*W row re-read on skewed gains.
 
-On TPU these memory-bound full sweeps beat heap-based lazy greedy — no
-pointer chasing, same words touched — which is our TPU adaptation of
-the paper's Algorithm 2 (lazy greedy is kept as a NumPy oracle for
-equivalence tests: both achieve identical coverage).
+For uniform gain profiles the memory-bound full sweeps ("resident")
+win on TPU — no pointer chasing, same words touched; on skewed
+profiles "lazy" skips most of the re-read while staying bit-exact.
+The paper's heap-based Algorithm 2 is kept as a NumPy oracle for
+equivalence tests: all paths achieve identical coverage.
 
 ``use_kernel`` is a deprecated alias: True maps to ``solver="fused"``,
 False to ``solver="scan"``.
@@ -37,7 +45,7 @@ import numpy as np
 
 from repro.core import bitset
 
-SOLVERS = ("scan", "fused", "resident")
+SOLVERS = ("scan", "fused", "resident", "lazy")
 
 
 class CoverSolution(NamedTuple):
@@ -51,7 +59,7 @@ class CoverSolution(NamedTuple):
 def resolve_solver(solver: str | None,
                    use_kernel: bool | None = None,
                    default: str = "scan") -> str:
-    """Resolve the solver triad from the new ``solver=`` argument and
+    """Resolve the solver quad from the new ``solver=`` argument and
     the deprecated ``use_kernel`` bool (True -> "fused", False ->
     "scan").  ``solver`` wins when both are given — the alias is then
     inert, so the deprecation warning only fires when ``use_kernel``
@@ -80,7 +88,7 @@ def greedy_maxcover(rows: jnp.ndarray, k: int,
     (1 - 1/e)-approximate solution.  ``solver`` picks the execution
     path (see module docstring); all paths are bit-identical.
 
-    Thin un-jitted shim: the solver triad (and the deprecated
+    Thin un-jitted shim: the solver quad (and the deprecated
     ``use_kernel`` alias, with its warning) resolves eagerly here so
     the DeprecationWarning points at the caller and fires on every
     call, not only at trace time; the jitted body is dispatched with
@@ -97,6 +105,15 @@ def _greedy_maxcover(rows: jnp.ndarray, k: int,
     if solver == "resident":
         from repro.kernels import ops as kops
         seeds, sel_rows, covered, gains = kops.greedy_maxcover_resident(
+            rows, k)
+        return CoverSolution(seeds, sel_rows, covered,
+                             bitset.coverage_size(covered), gains)
+
+    if solver == "lazy":
+        from repro.kernels import ops as kops
+        # The tiles-swept diagnostic is dropped here (CoverSolution is
+        # solver-agnostic); benchmarks read it off the kernel wrapper.
+        seeds, sel_rows, covered, gains, _ = kops.greedy_maxcover_lazy(
             rows, k)
         return CoverSolution(seeds, sel_rows, covered,
                              bitset.coverage_size(covered), gains)

@@ -56,8 +56,8 @@ def opim(g: CSRGraph, k: int, eps: float, key, *, model: str = "IC",
     """OPIM-C driver.  ``solver_alpha`` is the worst-case approximation
     of the selector (used for the OPT upper bound); defaults to the
     greedy 1 - 1/e.  ``solver`` picks the max-k-cover path of the
-    default greedy selector ("scan" | "fused" | "resident"); ignored
-    when an explicit ``selector`` is passed."""
+    default greedy selector ("scan" | "fused" | "resident" | "lazy");
+    ignored when an explicit ``selector`` is passed."""
     selector = selector or make_greedy_selector(solver)
     if solver_alpha is None:
         solver_alpha = 1.0 - 1.0 / math.e

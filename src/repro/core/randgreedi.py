@@ -48,8 +48,8 @@ def randgreedi_maxcover(rows: jnp.ndarray, key, *, m: int, k: int,
       only the first ceil(alpha*k) local seeds reach the aggregator.
 
     solver: greedy max-k-cover path for the local machines (and the
-      "greedy" aggregator) — "scan" | "fused" | "resident", all
-      bit-identical (see ``maxcover.greedy_maxcover``).  None defaults
+      "greedy" aggregator) — "scan" | "fused" | "resident" | "lazy",
+      all bit-identical (see ``maxcover.greedy_maxcover``).  None defaults
       from the deprecated ``use_kernel`` bool ("fused" when True);
       ``use_kernel`` also still routes the streaming aggregator through
       its fused receiver kernel.

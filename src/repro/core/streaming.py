@@ -59,7 +59,16 @@ def num_buckets(k: int, delta: float) -> int:
 
 def init_state(k: int, delta: float, lower: float, num_words: int,
                num_buckets_override: int | None = None) -> StreamState:
-    b = num_buckets_override or num_buckets(k, delta)
+    # `is None`, not truthiness: an explicit override of 0 must be
+    # rejected loudly, not silently fall back to the formula.
+    if num_buckets_override is None:
+        b = num_buckets(k, delta)
+    else:
+        if num_buckets_override < 1:
+            raise ValueError(
+                f"num_buckets_override must be >= 1 (at least one "
+                f"threshold bucket), got {num_buckets_override}")
+        b = num_buckets_override
     guesses = lower * (1.0 + delta) ** jnp.arange(b, dtype=jnp.float32)
     return StreamState(
         covers=jnp.zeros((b, num_words), dtype=bitset.WORD_DTYPE),
@@ -188,12 +197,15 @@ def finalize(state: StreamState):
     Checks the bucket-capacity invariant counts <= k when called on
     concrete (non-traced) state — a bucket with more admissions than
     seed slots would mean an accepted candidate overwrote a slot.
+    An explicit raise (not ``assert``) so the overfill guard survives
+    ``python -O``.
     """
     k = state.seeds.shape[1]
     if not isinstance(state.counts, jax.core.Tracer):
-        assert int(jnp.max(state.counts)) <= k, (
-            f"bucket overfilled: max count {int(jnp.max(state.counts))} "
-            f"> capacity k={k}")
+        if int(jnp.max(state.counts)) > k:
+            raise ValueError(
+                f"bucket overfilled: max count "
+                f"{int(jnp.max(state.counts))} > capacity k={k}")
     per_bucket = bitset.coverage_size(state.covers)  # [B]
     best = jnp.argmax(per_bucket)
     return state.seeds[best], per_bucket[best]
@@ -228,11 +240,17 @@ def streaming_maxcover(seed_ids: jnp.ndarray, rows: jnp.ndarray, k: int,
     if receiver not in ("scan", "fused", "pipelined"):
         raise ValueError(f"unknown receiver path {receiver!r}")
     state = init_state(k, delta, lower, rows.shape[1], num_buckets_override)
-    if receiver == "pipelined":
+    total = seed_ids.shape[0]
+    if total == 0:
+        # Empty candidate stream: nothing to insert on any receiver
+        # path.  Without this guard the pipelined path would chunk a
+        # zero-length stream into an R=0 layout and hand the stream
+        # kernel an empty grid.
+        pass
+    elif receiver == "pipelined":
         from repro.kernels import bucket_insert
-        total = seed_ids.shape[0]
         cs = min(chunk_size or bucket_insert.auto_chunk_size(
-            state.covers.shape[0], rows.shape[1], k, total), max(total, 1))
+            state.covers.shape[0], rows.shape[1], k, total), total)
         ids_ch, rows_ch = chunk_stream(seed_ids, rows, cs)
         state = insert_stream(state, ids_ch, rows_ch, k)
     else:

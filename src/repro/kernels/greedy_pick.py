@@ -32,13 +32,19 @@ Launch/HBM-traffic model per solve (k picks over [n, W] rows):
             materializes; per-block maxima only)
   resident  1 launch,   k*(n*W + W) words     (row stream re-read per
             pick + winner re-gather; covered never leaves VMEM)
+  lazy      1 launch,   s*k*n*W + k*W words   (kernels/lazy_greedy.py:
+            per-tile stale upper bounds skip most of the re-read on
+            skewed gains; s = measured sweep fraction <= 1)
 
 Tie-break is bit-identical to ``jnp.argmax`` over the full masked
 gain vector: tiles are visited in ascending vertex order, jnp.argmax
 within a tile prefers the lowest index, and the cross-tile carry only
 replaces the incumbent on a strictly greater gain — so ties resolve
-to the globally lowest index, and all three solvers agree bit-for-bit
-on seeds, rows, covered, and gains.
+to the globally lowest index, and all four solvers (scan / fused /
+resident / lazy) agree bit-for-bit on seeds, rows, covered, and
+gains.  The per-tile sweep body and the post-argmax commit are shared
+with the lazy kernel (``sweep_tile_argmax`` / ``commit_pick`` below)
+so the bit-exactness contract has exactly one implementation.
 """
 from __future__ import annotations
 
@@ -52,6 +58,47 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels import gain_core
 
 BLOCK_V = 128
+
+
+def sweep_tile_argmax(tile, covered, seeds, t, block_v: int):
+    """Masked gain sweep + within-tile argmax of one [BV, Wp] row tile
+    — the per-pick pass body shared by the resident and lazy kernels.
+
+    tile    uint32 [BV, Wp]  row tile (VMEM)
+    covered uint32 [1, Wp]   running cover
+    seeds   int32  [1, k]    resident picked set (-1 = empty slot)
+
+    Returns (gain int32, index int32) of the tile's best row with
+    ``jnp.argmax``'s lowest-index preference; rows whose global index
+    appears in ``seeds`` are masked to gain -1 (real row indices are
+    never -1, so empty slots match nothing).
+    """
+    g = gain_core.gain_tile_sum(tile, covered)             # [BV, 1]
+    ridx_t = t * block_v + jax.lax.broadcasted_iota(
+        jnp.int32, (block_v, 1), 0)
+    taken = jnp.any(ridx_t == seeds, axis=1, keepdims=True)  # [BV, 1]
+    g = jnp.where(taken, -1, g)[:, 0]                      # [BV]
+    a = jnp.argmax(g)                    # lowest index within tile
+    return g[a], a.astype(jnp.int32)
+
+
+def commit_pick(pick, best_gain, best_idx, winner_buf, covered_ref,
+                rows_out_ref, seeds_ref, gains_ref, lane_k):
+    """Fused post-argmax pick commit shared by the resident and lazy
+    kernels: a non-positive best gain is rejected (seed -1, gain 0,
+    no cover/row update — identical to ``jnp.argmax`` over an
+    all-masked vector), otherwise the re-gathered winner row ORs into
+    the cover and the seed/gain/row outputs are written in place."""
+    take = best_gain > 0
+    row = jnp.where(take, winner_buf[...],
+                    jnp.zeros_like(winner_buf[...]))       # [1, Wp]
+    covered_ref[...] = covered_ref[...] | row
+    rows_out_ref[pl.ds(pick, 1), :] = row
+    hit = lane_k == pick
+    seeds_ref[...] = jnp.where(
+        hit, jnp.where(take, best_idx, -1), seeds_ref[...])
+    gains_ref[...] = jnp.where(
+        hit, jnp.where(take, best_gain, 0), gains_ref[...])
 
 
 def _kernel(rows_hbm, seeds_ref, rows_out_ref, covered_ref, gains_ref,
@@ -101,20 +148,12 @@ def _kernel(rows_hbm, seeds_ref, rows_out_ref, covered_ref, gains_ref,
                 tile_dma(jax.lax.rem(t + 1, 2), t + 1).start()
 
             tile_dma(slot, t).wait()
-            g = gain_core.gain_tile_sum(tile_buf[slot],
-                                        covered_ref[...])      # [BV, 1]
-            # picked iff the row index is in the resident seeds list
-            ridx_t = t * block_v + jax.lax.broadcasted_iota(
-                jnp.int32, (block_v, 1), 0)
-            taken = jnp.any(ridx_t == seeds_ref[...], axis=1,
-                            keepdims=True)                     # [BV, 1]
-            g = jnp.where(taken, -1, g)[:, 0]                  # [BV]
-            a = jnp.argmax(g)                # lowest index within tile
+            ga, a = sweep_tile_argmax(tile_buf[slot], covered_ref[...],
+                                      seeds_ref[...], t, block_v)
             bg, bi = best
-            better = g[a] > bg               # strict: keep lowest tile
-            return (jnp.where(better, g[a], bg),
-                    jnp.where(better, t * block_v + a.astype(jnp.int32),
-                              bi))
+            better = ga > bg                 # strict: keep lowest tile
+            return (jnp.where(better, ga, bg),
+                    jnp.where(better, t * block_v + a, bi))
 
         best_gain, best_idx = jax.lax.fori_loop(
             0, num_tiles, tile_body, (jnp.int32(-1), jnp.int32(0)))
@@ -126,16 +165,8 @@ def _kernel(rows_hbm, seeds_ref, rows_out_ref, covered_ref, gains_ref,
         win.wait()
 
         # --- fused update: cover OR, seed/gain/row writes -----------
-        take = best_gain > 0
-        row = jnp.where(take, winner_buf[...],
-                        jnp.zeros_like(winner_buf[...]))       # [1, Wp]
-        covered_ref[...] = covered_ref[...] | row
-        rows_out_ref[pl.ds(pick, 1), :] = row
-        hit = lane_k == pick
-        seeds_ref[...] = jnp.where(
-            hit, jnp.where(take, best_idx, -1), seeds_ref[...])
-        gains_ref[...] = jnp.where(
-            hit, jnp.where(take, best_gain, 0), gains_ref[...])
+        commit_pick(pick, best_gain, best_idx, winner_buf, covered_ref,
+                    rows_out_ref, seeds_ref, gains_ref, lane_k)
         return 0
 
     jax.lax.fori_loop(0, k, pick_body, 0)

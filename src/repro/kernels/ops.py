@@ -16,6 +16,7 @@ from repro.kernels.bucket_insert import (bucket_insert_chunk_pallas,
                                          bucket_insert_stream_pallas)
 from repro.kernels.coverage import marginal_gain_pallas
 from repro.kernels.greedy_pick import greedy_maxcover_resident_pallas
+from repro.kernels.lazy_greedy import greedy_maxcover_lazy_pallas
 from repro.kernels.topk_gain import best_gain_index_pallas
 
 
@@ -45,6 +46,15 @@ def greedy_maxcover_resident(rows: jnp.ndarray, k: int):
     VMEM-resident for the whole loop, rows double-buffered HBM->VMEM."""
     return greedy_maxcover_resident_pallas(rows, k,
                                            interpret=_interpret())
+
+
+def greedy_maxcover_lazy(rows: jnp.ndarray, k: int):
+    """Lazy-greedy resident max-k-cover (the ``solver="lazy"`` engine):
+    one pallas_call like the resident solver, but each pick only DMAs +
+    re-sweeps row tiles whose VMEM-resident stale upper bound can still
+    beat the running best gain.  Returns the resident tuple plus a
+    ``tiles_swept`` counter (skip ratio = swept / (k * num_tiles))."""
+    return greedy_maxcover_lazy_pallas(rows, k, interpret=_interpret())
 
 
 def bucket_insert_chunk(seed_ids: jnp.ndarray, rows: jnp.ndarray,

@@ -56,12 +56,15 @@ def main(argv=None):
                     help="fixed theta (skip martingale loop)")
     ap.add_argument("--use-opim", action="store_true")
     ap.add_argument("--solver", default=None,
-                    choices=("scan", "fused", "resident"),
+                    choices=("scan", "fused", "resident", "lazy"),
                     help="sender (S3) greedy max-k-cover path: 'scan' "
                          "(full sweep + argmax per pick), 'fused' (one "
-                         "fused gain+argmax kernel launch per pick), or "
+                         "fused gain+argmax kernel launch per pick), "
                          "'resident' (all k picks in ONE pallas_call, "
-                         "state VMEM-resident); all bit-identical")
+                         "state VMEM-resident), or 'lazy' (resident "
+                         "plus per-tile stale upper bounds — each pick "
+                         "only re-sweeps tiles that can still beat the "
+                         "running best); all four bit-identical")
     ap.add_argument("--use-kernel", action="store_true",
                     help="DEPRECATED: maps to --solver fused and "
                          "additionally routes the receiver through the "

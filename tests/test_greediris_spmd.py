@@ -178,15 +178,15 @@ print("routings identical", ref_cov)
     assert "routings identical" in out
 
 
-def test_sender_solver_triad_bit_identical_on_mesh():
-    """S3 solver routing: scan, fused, and resident senders must
+def test_sender_solver_quad_bit_identical_on_mesh():
+    """S3 solver routing: scan, fused, resident, and lazy senders must
     produce identical seeds through the whole distributed round, and
-    the resident sender must trace to exactly ONE pallas_call for the
-    entire greedy solve (receiver kept on the scan path so the jaxpr
-    contains only S3 kernels)."""
+    the resident and lazy senders must each trace to exactly ONE
+    pallas_call for the entire greedy solve (receiver kept on the scan
+    path so the jaxpr contains only S3 kernels)."""
     out = run_with_devices(_PRELUDE + textwrap.dedent("""
         ref = None
-        for solver in ("scan", "fused", "resident"):
+        for solver in ("scan", "fused", "resident", "lazy"):
             fn, _, _ = greediris.build_round(
                 mesh, ("machines",), n=200, theta=512, k=8,
                 max_degree=g.max_in_degree(), solver=solver)
@@ -197,14 +197,16 @@ def test_sender_solver_triad_bit_identical_on_mesh():
                 np.testing.assert_array_equal(np.asarray(o.seeds),
                                               ref[0], err_msg=solver)
                 assert int(o.coverage) == ref[1], solver
-        fn, _, _ = greediris.build_round(
-            mesh, ("machines",), n=200, theta=512, k=8,
-            max_degree=g.max_in_degree(), solver="resident")
-        jx = str(jax.make_jaxpr(fn)(nbr, prob, wt, key))
-        assert jx.count("pallas_call") == 1, jx.count("pallas_call")
-        print("solver triad identical", ref[1])
+        for solver in ("resident", "lazy"):
+            fn, _, _ = greediris.build_round(
+                mesh, ("machines",), n=200, theta=512, k=8,
+                max_degree=g.max_in_degree(), solver=solver)
+            jx = str(jax.make_jaxpr(fn)(nbr, prob, wt, key))
+            assert jx.count("pallas_call") == 1, (
+                solver, jx.count("pallas_call"))
+        print("solver quad identical", ref[1])
     """))
-    assert "solver triad identical" in out
+    assert "solver quad identical" in out
 
 
 def test_gather_receiver_issues_one_stream_call(monkeypatch):

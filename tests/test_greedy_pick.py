@@ -1,12 +1,14 @@
-"""Sender (S3) solver triad: scan vs fused vs resident.
+"""Sender (S3) solver quad: scan vs fused vs resident vs lazy.
 
 Acceptance criteria pinned here:
   * every solver path is bit-identical to "scan" in seeds, rows,
     covered, and gains — including the lowest-index argmax tie-break —
     across non-tile-aligned n / W and k > #useful-rows;
   * every solver path matches the NumPy lazy-greedy oracle's coverage;
-  * solver="resident" compiles the whole greedy solve to exactly ONE
-    pallas_call (jaxpr assertion), "scan" to zero.
+  * solver="resident" and solver="lazy" each compile the whole greedy
+    solve to exactly ONE pallas_call (jaxpr assertion), "scan" to zero;
+  * solver="lazy" actually skips tiles (tiles_swept < k * num_tiles)
+    on a skewed gain distribution while staying bit-exact.
 """
 import jax
 import jax.numpy as jnp
@@ -15,7 +17,7 @@ import pytest
 
 from repro.core import bitset, maxcover
 
-SOLVERS = ("scan", "fused", "resident")
+SOLVERS = ("scan", "fused", "resident", "lazy")
 
 # Non-tile-aligned vertex/word counts on purpose (the kernels pad to
 # 8-sublane x 128-lane tiles internally).
@@ -107,16 +109,60 @@ def test_exhausted_gain_early_stop(solver):
     assert int(got.coverage) == lazy_cov
 
 
-def test_resident_single_pallas_call_jaxpr():
-    """Acceptance criterion: solver="resident" compiles the whole S3
-    greedy solve to exactly ONE pallas_call; "scan" to zero."""
+@pytest.mark.parametrize("solver", ("resident", "lazy"))
+def test_resident_single_pallas_call_jaxpr(solver):
+    """Acceptance criterion: solver="resident" and solver="lazy" each
+    compile the whole S3 greedy solve to exactly ONE pallas_call;
+    "scan" to zero."""
     rows = _random_rows(64, 4, seed=0)
     jx = jax.make_jaxpr(
-        lambda r: maxcover.greedy_maxcover(r, 8, solver="resident"))(rows)
+        lambda r: maxcover.greedy_maxcover(r, 8, solver=solver))(rows)
     assert str(jx).count("pallas_call") == 1
     jx_scan = jax.make_jaxpr(
         lambda r: maxcover.greedy_maxcover(r, 8, solver="scan"))(rows)
     assert str(jx_scan).count("pallas_call") == 0
+
+
+def test_lazy_skips_tiles_on_skewed_gains():
+    """The lazy kernel's stale bounds must actually pay off: on a
+    power-law gain profile (a few heavy rows, a long light tail) the
+    tiles-swept counter stays well below the resident kernel's
+    k * num_tiles full re-read, while seeds/gains match "scan"
+    bit-for-bit.  On this multi-tile input at least pick 1's full pass
+    plus one tile per later pick is unavoidable, so the bound below is
+    the loosest meaningful one."""
+    from repro.kernels import lazy_greedy, ops
+
+    rng = np.random.default_rng(11)
+    n, w, k = 512, 8, 6
+    density = 0.6 * (np.arange(n) + 1.0) ** -0.8
+    dense = rng.random((n, w * 32)) < density[:, None]
+    rows = bitset.pack_bool_matrix(jnp.asarray(dense))
+
+    want = maxcover.greedy_maxcover(rows, k, solver="scan")
+    seeds, sel_rows, covered, gains, swept = ops.greedy_maxcover_lazy(
+        rows, k)
+    np.testing.assert_array_equal(np.asarray(seeds),
+                                  np.asarray(want.seeds))
+    np.testing.assert_array_equal(np.asarray(gains),
+                                  np.asarray(want.gains))
+    np.testing.assert_array_equal(np.asarray(covered),
+                                  np.asarray(want.covered))
+    num_tiles = lazy_greedy.num_row_tiles(n)
+    assert num_tiles >= 4          # the skew claim needs >1 tile
+    assert int(swept) >= num_tiles  # pick 1 always sweeps everything
+    assert int(swept) < k * num_tiles, (int(swept), k * num_tiles)
+
+
+def test_lazy_swept_counter_exact_on_uniform_single_tile():
+    """One-tile inputs degenerate to the resident kernel: every pick
+    sweeps the single tile, so tiles_swept == k exactly."""
+    from repro.kernels import lazy_greedy, ops
+
+    rows = _random_rows(64, 4, seed=7)
+    assert lazy_greedy.num_row_tiles(64) == 1
+    *_, swept = ops.greedy_maxcover_lazy(rows, 5)
+    assert int(swept) == 5
 
 
 def test_use_kernel_alias_deprecated():

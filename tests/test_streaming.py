@@ -143,8 +143,92 @@ def test_full_bucket_seed_slots_untouched(receiver):
     streaming.finalize(state)           # invariant check passes
 
 
-def test_finalize_asserts_on_overfilled_bucket():
+def test_finalize_raises_on_overfilled_bucket():
+    """The capacity guard is an explicit ValueError, not a bare
+    ``assert``, so it survives ``python -O`` (assertions stripped)."""
     state = streaming.init_state(2, 0.077, 1.0, 4)
     bad = state._replace(counts=state.counts + 3)   # counts > k = 2
-    with pytest.raises(AssertionError, match="overfilled"):
+    with pytest.raises(ValueError, match="overfilled"):
         streaming.finalize(bad)
+
+
+def test_init_state_override_validation():
+    """Regression: ``num_buckets_override`` is resolved with an
+    ``is None`` check — an explicit 0 (or any value < 1) must raise,
+    not silently fall back to the num_buckets formula."""
+    for bad in (0, -1, -63):
+        with pytest.raises(ValueError, match="num_buckets_override"):
+            streaming.init_state(4, 0.077, 1.0, 8,
+                                 num_buckets_override=bad)
+    # an explicit valid override is honored exactly
+    st = streaming.init_state(4, 0.077, 1.0, 8, num_buckets_override=5)
+    assert st.covers.shape[0] == 5
+    # ...and None still means "use the formula"
+    st = streaming.init_state(4, 0.077, 1.0, 8)
+    assert st.covers.shape[0] == streaming.num_buckets(4, 0.077)
+
+
+@pytest.mark.parametrize("receiver", ["scan", "fused", "pipelined"])
+def test_empty_stream_all_receivers(receiver):
+    """Regression: a zero-length candidate stream must return the
+    freshly initialized state on every receiver path (the pipelined
+    path used to chunk it into an R=0 layout and hand the stream
+    kernel an empty grid), bit-identically across receivers."""
+    k, delta, w = 3, 0.077, 4
+    ids = jnp.zeros((0,), dtype=jnp.int32)
+    rows = jnp.zeros((0, w), dtype=jnp.uint32)
+    seeds, cov, state = streaming.streaming_maxcover(
+        ids, rows, k, delta, jnp.float32(2.0), receiver=receiver)
+    fresh = streaming.init_state(k, delta, 2.0, w)
+    assert int(cov) == 0
+    assert (np.asarray(seeds) == -1).all()
+    np.testing.assert_array_equal(np.asarray(state.covers),
+                                  np.asarray(fresh.covers))
+    np.testing.assert_array_equal(np.asarray(state.counts),
+                                  np.asarray(fresh.counts))
+    np.testing.assert_array_equal(np.asarray(state.seeds),
+                                  np.asarray(fresh.seeds))
+    # thresholds come out of the jitted init path; eager float32
+    # rounding can differ in the last ulp
+    np.testing.assert_allclose(np.asarray(state.thresholds),
+                               np.asarray(fresh.thresholds), rtol=1e-6)
+
+
+@pytest.mark.parametrize("receiver", ["scan", "fused", "pipelined"])
+def test_degenerate_zero_lower_parity(receiver):
+    """Degenerate-threshold regime: lower == 0 (all-zero singleton
+    gains) makes every bucket threshold 0, so every valid candidate is
+    admitted until counts == k — on all three receiver paths,
+    bit-identically with the scan reference."""
+    k, delta, w, n = 2, 0.077, 3, 6
+    rows = jnp.zeros((n, w), dtype=jnp.uint32)    # all gains are 0
+    ids = jnp.arange(n, dtype=jnp.int32)
+    _, _, want = streaming.streaming_maxcover(
+        ids, rows, k, delta, jnp.float32(0.0), receiver="scan")
+    # thresholds all 0 and the first k candidates fill every bucket
+    assert (np.asarray(want.thresholds) == 0.0).all()
+    assert (np.asarray(want.counts) == k).all()
+    np.testing.assert_array_equal(
+        np.asarray(want.seeds),
+        np.broadcast_to(np.arange(k, dtype=np.int32), want.seeds.shape))
+    got = streaming.streaming_maxcover(
+        ids, rows, k, delta, jnp.float32(0.0), receiver=receiver,
+        chunk_size=2 if receiver == "pipelined" else None)[2]
+    for f in ("covers", "counts", "seeds", "thresholds"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, f)), np.asarray(getattr(want, f)),
+            err_msg=f"receiver={receiver} field={f}")
+
+
+def test_num_buckets_k1_end_to_end():
+    """num_buckets(k=1, delta) must still yield >= 1 bucket, and the
+    whole streaming pass must work end-to-end at k=1."""
+    assert streaming.num_buckets(1, 0.077) >= 1
+    rows = jnp.asarray(np.array([[0x3], [0xFF]], dtype=np.uint32))
+    ids = jnp.arange(2, dtype=jnp.int32)
+    for receiver in ("scan", "fused", "pipelined"):
+        seeds, cov, state = streaming.streaming_maxcover(
+            ids, rows, 1, 0.077, jnp.float32(8.0), receiver=receiver)
+        assert state.covers.shape[0] >= 1
+        assert int(cov) >= 2       # at least one candidate admitted
+        assert int(np.asarray(seeds)[0]) >= 0
