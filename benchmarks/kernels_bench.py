@@ -269,6 +269,85 @@ def bench_sender(fast: bool):
            f"parity=scan-exact cpu_mode=interpret-emulation")
 
 
+def bench_sampler(fast: bool):
+    """Sampler (S1) RRR BFS: dense vs packed vs the fused expansion
+    kernel.
+
+    Frontier/visited *state* bytes touched per BFS step (read frontier
+    + visited, write new + visited — both paths touch each once per
+    step; S steps total), plus the dense path's sampling epilogue (the
+    [theta, n] bool visited written by the BFS, re-read transposed by
+    pack_bool_matrix, plus the packed write):
+
+      dense   S * 4*theta*n  + 2*theta*n + theta*n/8   bytes
+              (bool state; [theta, n] intermediate + transpose + pack)
+      packed  S * 4*theta*n/8            + theta*n/8   bytes
+              (uint32 words hold 32 samples; the incidence IS the
+              visited state — no intermediate, no epilogue)
+      kernel  packed state bytes, 1 launch per BFS step (the gathered
+              [n, d_out, W] frontier intermediate of the packed XLA
+              path also never round-trips HBM)
+
+    The >= 8x state ratio is asserted (model-verified) before the rows
+    are recorded, as is bit-identity of all three samplers' packed
+    incidence.  CPU wall times below (the kernel path runs
+    interpret-emulated); coin draws are identical across samplers by
+    construction, so their traffic cancels in the comparison.
+    """
+    from repro.core.rrr import sample_incidence
+    from repro.graphs import generators
+    from repro.graphs.csr import padded_adjacency, padded_forward_adjacency
+
+    n, avg_deg, theta, steps = ((512, 8.0, 256, 8) if fast
+                                else (4096, 8.0, 2048, 16))
+    g = generators.erdos_renyi(n, avg_deg, seed=3)
+    nbr, prob, wt = padded_adjacency(g)
+    fwd = padded_forward_adjacency(g)
+    key = jax.random.key(11)
+
+    outs = {}
+    times = {}
+    for sampler in ("dense", "packed", "kernel"):
+        def run(nb, pb, wb, ky, s=sampler):
+            return sample_incidence(nb, pb, wb, ky, theta=theta, n=n,
+                                    model="IC", max_steps=steps,
+                                    sampler=s,
+                                    fwd=(None if s == "dense" else fwd))
+        outs[sampler] = run(nbr, prob, wt, key)
+        times[sampler] = timeit(run, nbr, prob, wt, key)
+    np.testing.assert_array_equal(np.asarray(outs["dense"]),
+                                  np.asarray(outs["packed"]))
+    np.testing.assert_array_equal(np.asarray(outs["dense"]),
+                                  np.asarray(outs["kernel"]))
+
+    dense_state = steps * 4 * theta * n
+    packed_state = steps * 4 * theta * n // 8
+    epilogue = 2 * theta * n + theta * n // 8   # dense-only
+    dense_bytes = dense_state + epilogue
+    packed_bytes = packed_state + theta * n // 8
+    state_ratio = dense_state / packed_state
+    assert state_ratio >= 8.0, state_ratio    # acceptance: model-verified
+    record(f"rrr/sampler_dense/n={n},theta={theta},S={steps}",
+           times["dense"] * 1e6,
+           f"tpu_roofline_target_us={dense_bytes/HBM_BW*1e6:.2f} "
+           f"state_bytes={dense_state} epilogue_bytes={epilogue} "
+           f"parity=packed-exact")
+    record(f"rrr/sampler_packed/n={n},theta={theta},S={steps}",
+           times["packed"] * 1e6,
+           f"tpu_roofline_target_us={packed_bytes/HBM_BW*1e6:.2f} "
+           f"state_bytes={packed_state} "
+           f"state_bytes_ratio={state_ratio:.1f}x "
+           f"total_bytes_ratio={dense_bytes/packed_bytes:.1f}x "
+           f"parity=dense-exact")
+    record(f"rrr/sampler_kernel/n={n},theta={theta},S={steps}",
+           times["kernel"] * 1e6,
+           f"tpu_roofline_target_us={packed_bytes/HBM_BW*1e6:.2f} "
+           f"state_bytes={packed_state} "
+           f"state_bytes_ratio={state_ratio:.1f}x "
+           f"launches_per_step=1 parity=dense-exact "
+           f"cpu_mode=interpret-emulation")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", default=None, metavar="OUT",
@@ -290,6 +369,7 @@ def main(argv=None):
         bench_coverage(args.fast)
         bench_receiver(args.fast)
         bench_sender(args.fast)
+        bench_sampler(args.fast)
     calib = min(calib, calibration_us())
     for name, row in _RESULTS.items():
         emit(name, float(row["us"]), row["derived"])

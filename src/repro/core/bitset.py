@@ -68,6 +68,54 @@ def union(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return a | b
 
 
+def or_reduce(words: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Bitwise-OR reduction of packed words along ``axis``.
+
+    The word-parallel analogue of ``jnp.any`` over a bool axis — used
+    by the packed RRR expansion to fold the gathered per-edge
+    contributions into one frontier word per vertex.  Exact (OR is
+    associative/commutative), any reduction order is bit-identical.
+    """
+    return jax.lax.reduce(words, jnp.array(0, words.dtype),
+                          jax.lax.bitwise_or, (axis,))
+
+
+def packed_nonzero(words: jnp.ndarray, *, size: int,
+                   fill_value: int = -1):
+    """(sample, vertex) pairs of the set bits of packed incidence words.
+
+    The packed-word equivalent of
+    ``jnp.nonzero(unpack_words(words, theta).T, size=size)`` — without
+    ever materializing the [theta, n] bool matrix.  Iterates the 32
+    bit-planes of the word axis (each plane is an [n, W] bool, 1/32 of
+    the dense matrix) and merges the per-plane hits into global
+    ``(sample = w*32 + j, vertex)`` pairs sorted sample-major — the
+    row-major order ``jnp.nonzero`` yields on the dense [theta, n]
+    matrix, so downstream fixed-capacity packing (the sparse-shuffle
+    COO exchange) sees an identical candidate stream whenever the true
+    pair count fits in ``size``.  Beyond ``size`` both representations
+    truncate; the dropped subset may differ (per-plane caps apply
+    first here), exactly as overflow drops already differ across
+    shard counts.
+
+    Returns ``(sample_idx, vertex_idx)`` int32 [size] arrays, tail
+    filled with ``fill_value``.
+    """
+    s_all, v_all = [], []
+    for j in range(WORD_BITS):
+        plane = (words >> WORD_DTYPE(j)) & WORD_DTYPE(1)
+        v_j, w_j = jnp.nonzero(plane, size=size, fill_value=-1)
+        s_all.append(jnp.where(w_j >= 0, w_j * WORD_BITS + j, -1))
+        v_all.append(v_j)
+    s_cat = jnp.concatenate(s_all).astype(jnp.int32)
+    v_cat = jnp.concatenate(v_all).astype(jnp.int32)
+    invalid = s_cat < 0
+    order = jnp.lexsort((v_cat, s_cat, invalid))[:size]
+    bad = invalid[order]
+    return (jnp.where(bad, fill_value, s_cat[order]),
+            jnp.where(bad, fill_value, v_cat[order]))
+
+
 def pack_indices(indices: np.ndarray, theta: int) -> np.ndarray:
     """NumPy helper: pack a list of sample indices into a word row."""
     w = num_words(theta)

@@ -6,6 +6,23 @@ This is the paper's §3.4 workflow mapped onto TPU-native collectives
   S1 sampling       — shard_map over the machine axes; each shard draws
                       theta/m RRR sets with a fold_in(key, shard) stream
                       (leapfrog analogue: partition-independent RNG).
+                      Three sampler paths (`sampler=`), all
+                      bit-identical (same key ⇒ identical packed
+                      incidence):
+                      * "dense":  bool [batch, n] frontier/visited BFS
+                        with a scatter expansion, packed + transposed
+                        after the fact (the reference path);
+                      * "packed": word-packed uint32 [n, batch/32]
+                        frontier/visited for the whole BFS (8x fewer
+                        state bytes) with a gather expansion over the
+                        padded forward adjacency; the packed incidence
+                        is emitted directly — no [theta, n] bool
+                        intermediate, no pack/transpose epilogue;
+                      * "kernel": the packed path with each BFS
+                        expansion fused into ONE pallas_call
+                        (`kernels.rrr_expand`) — frontier/visited
+                        words VMEM-resident, forward-index and packed
+                        coin-mask tiles streamed double-buffered.
   S2 all-to-all     — `lax.all_to_all` of the packed incidence bitmatrix
                       (split vertices, concat sample-words) after a
                       globally-agreed random vertex permutation (the
@@ -91,7 +108,9 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
                 use_kernel: bool = False, shuffle: str = "dense",
                 est_rrr_len: float = 16.0,
                 chunk_size: int | str | None = None,
-                solver: str | None = None):
+                solver: str | None = None,
+                sampler: str | None = None, fwd=None,
+                coin_chunk: int = 32):
     """Build the jittable distributed round fn(nbr, prob, wt, key).
 
     The graph (padded reverse adjacency [n_pad, d]) is replicated on
@@ -120,10 +139,29 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
     ring payload (the ppermute of chunk r+1 overlaps the fused
     insertion of chunk r).
 
+    sampler: S1 sampling path — "dense" | "packed" | "kernel" (see the
+    module docstring; all bit-identical, so every downstream stage —
+    shuffle, senders, receiver — produces identical outputs for the
+    same key).  The packed paths need ``fwd=(fwd_nbr, fwd_rslot)``,
+    the padded forward adjacency from
+    ``repro.graphs.csr.padded_forward_adjacency(g)`` (closed over as a
+    replicated constant, like the mesh).
+
+    coin_chunk: IC coin-draw slot width inside the sampler BFS.  It
+    bounds the per-step *bool coin intermediate* to
+    O(batch * n * coin_chunk) on every sampler; the packed samplers
+    additionally hold the word-packed [n, d_max, batch/32] slot mask
+    (batch/8 bytes per edge slot — 1/8 of an unchunked bool mask, but
+    not bounded by coin_chunk; see ``repro.core.rrr``).  Under IC the
+    chunk index is folded into the PRNG stream, so the knob acts like
+    a seed — any fixed value keeps the samplers bit-identical to each
+    other, changing it changes the sampled sets.
+
     shuffle:
       "dense"  — all_to_all of the packed incidence bitmatrix (paper-
                  faithful fixed-shape adaptation; O(n * theta / 32)
-                 bytes regardless of RRR sparsity).
+                 bytes regardless of RRR sparsity).  With a packed
+                 sampler the bitmatrix comes straight out of S1.
       "sparse" — communication-optimized: exchange (vertex, sample)
                  COO pairs in fixed-capacity per-destination buckets
                  and rebuild the packed rows locally.  Bytes scale
@@ -145,6 +183,16 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
     # True value routes through the deprecated-alias path (and warns);
     # it keeps kernelizing the S4 receiver either way.
     solver = maxcover.resolve_solver(solver, use_kernel or None)
+    from repro.core.rrr import (rrr_batch, rrr_batch_packed,
+                                resolve_sampler)
+    sampler = resolve_sampler(sampler)
+    if sampler != "dense":
+        if fwd is None:
+            raise ValueError(
+                f"sampler={sampler!r} needs fwd=(fwd_nbr, fwd_rslot) — "
+                "pass repro.graphs.csr.padded_forward_adjacency(g)")
+        fwd_nbr, fwd_rslot = fwd
+        expand = "kernel" if sampler == "kernel" else "jax"
     axes = tuple(axes)
     m = _axis_size(mesh, axes)
     n_pad = ((n + m - 1) // m) * m
@@ -168,7 +216,17 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
     # sparse-shuffle bucket capacity: pairs per (src, dst) pair
     cap = max(64, int(2.0 * theta_local * est_rrr_len / m))
 
-    from repro.core.rrr import rrr_batch
+    def sample_packed(nbr, prob, wt, roots, kb):
+        """One S1 batch as packed words [n, b/32] under the sampler."""
+        if sampler == "dense":
+            vis = rrr_batch(nbr, prob, wt, roots, kb, model=model,
+                            max_steps=max_steps,
+                            coin_chunk=coin_chunk)         # [b, n]
+            return bitset.pack_bool_matrix(vis.T)          # [n, b/32]
+        return rrr_batch_packed(nbr, prob, wt, fwd_nbr, fwd_rslot,
+                                roots, kb, model=model,
+                                max_steps=max_steps,
+                                coin_chunk=coin_chunk, expand=expand)
 
     def shard_fn(nbr, prob, wt, key):
         pid = lax.axis_index(axes)
@@ -184,9 +242,7 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
                 kr, kb = jax.random.split(kc)
                 b = theta_local // sample_chunks
                 roots = jax.random.randint(kr, (b,), 0, n)
-                vis = rrr_batch(nbr, prob, wt, roots, kb, model=model,
-                                max_steps=max_steps)      # [b, n]
-                packed = bitset.pack_bool_matrix(vis.T)    # [n, b/32]
+                packed = sample_packed(nbr, prob, wt, roots, kb)
                 return lax.dynamic_update_slice(
                     acc, packed, (0, i * (b // 32)))
 
@@ -209,11 +265,20 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
                 kr, kb = jax.random.split(kc)
                 b = theta_local // sample_chunks
                 roots = jax.random.randint(kr, (b,), 0, n)
-                vis = rrr_batch(nbr, prob, wt, roots, kb, model=model,
-                                max_steps=max_steps)      # [b, n]
                 size = cap * m // sample_chunks
-                s_idx, v_idx = jnp.nonzero(vis, size=size,
-                                           fill_value=-1)
+                if sampler == "dense":
+                    vis = rrr_batch(nbr, prob, wt, roots, kb,
+                                    model=model, max_steps=max_steps,
+                                    coin_chunk=coin_chunk)  # [b, n]
+                    s_idx, v_idx = jnp.nonzero(vis, size=size,
+                                               fill_value=-1)
+                else:
+                    # packed samplers feed the COO exchange through a
+                    # word-iterating nonzero — the [b, n] bool matrix
+                    # never materializes.
+                    packed = sample_packed(nbr, prob, wt, roots, kb)
+                    s_idx, v_idx = bitset.packed_nonzero(
+                        packed, size=size, fill_value=-1)
                 valid = s_idx >= 0
                 sample_gid = pid * theta_local + i * b + s_idx
                 pos = inv_perm[jnp.clip(v_idx, 0)]

@@ -16,8 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import maxcover, randgreedi, theory
-from repro.core.rrr import sample_incidence
-from repro.graphs.csr import CSRGraph, padded_adjacency
+from repro.core.rrr import resolve_sampler, sample_incidence
+from repro.graphs.csr import (CSRGraph, padded_adjacency,
+                              padded_forward_adjacency)
 
 # selector(rows [n, W], k, key) -> (seeds [k] int32, coverage int32)
 Selector = Callable[[jnp.ndarray, int, jax.Array], tuple]
@@ -78,7 +79,8 @@ def imm(g: CSRGraph, k: int, eps: float, key, *, model: str = "IC",
         ell: float = 1.0, selector: Optional[Selector] = None,
         max_theta: int = 1 << 16, max_steps: int = 32,
         theta0: Optional[int] = None,
-        solver: str = "scan") -> IMMResult:
+        solver: str = "scan", sampler: str = "dense",
+        coin_chunk: int = 32) -> IMMResult:
     """Run IMM and return the final seed set.
 
     max_theta caps the sampling effort so huge lambda* values (tiny
@@ -88,10 +90,16 @@ def imm(g: CSRGraph, k: int, eps: float, key, *, model: str = "IC",
     solver: max-k-cover path of the default greedy selector ("scan" |
     "fused" | "resident" | "lazy"); ignored when an explicit
     ``selector`` is passed (selectors carry their own solver choice).
+
+    sampler: S1 RRR sampling path ("dense" | "packed" | "kernel", all
+    bit-identical; see ``repro.core.rrr``); the packed paths build the
+    forward adjacency here once and reuse it across rounds.
     """
     selector = selector or make_greedy_selector(solver)
+    sampler = resolve_sampler(sampler)
     n = g.num_vertices
     nbr, prob, wt = padded_adjacency(g)
+    fwd = padded_forward_adjacency(g) if sampler != "dense" else None
     ell = theory.adjust_ell(n, k, ell)
     lp = theory.lambda_prime(n, k, eps, ell)
     eps_p = math.sqrt(2.0) * eps
@@ -113,7 +121,8 @@ def imm(g: CSRGraph, k: int, eps: float, key, *, model: str = "IC",
         if add > 0:
             inc = sample_incidence(
                 nbr, prob, wt, jax.random.fold_in(key, i), theta=add, n=n,
-                model=model, max_steps=max_steps)
+                model=model, max_steps=max_steps, sampler=sampler,
+                fwd=fwd, coin_chunk=coin_chunk)
             rows = inc if rows is None else jnp.concatenate([rows, inc], 1)
             theta_cur = theta_i
         seeds, cov = selector(rows, k, jax.random.fold_in(k_sel, i))
@@ -128,7 +137,8 @@ def imm(g: CSRGraph, k: int, eps: float, key, *, model: str = "IC",
     if theta > theta_cur:
         inc = sample_incidence(
             nbr, prob, wt, jax.random.fold_in(key, 0x5EED), n=n,
-            theta=theta - theta_cur, model=model, max_steps=max_steps)
+            theta=theta - theta_cur, model=model, max_steps=max_steps,
+            sampler=sampler, fwd=fwd, coin_chunk=coin_chunk)
         rows = jnp.concatenate([rows, inc], axis=1)
         theta_cur = theta
     seeds, cov = selector(rows, k, jax.random.fold_in(k_sel, 0x5EED))

@@ -20,8 +20,9 @@ import numpy as np
 
 from repro.core import maxcover
 from repro.core.imm import Selector, make_greedy_selector, _round32
-from repro.core.rrr import sample_incidence
-from repro.graphs.csr import CSRGraph, padded_adjacency
+from repro.core.rrr import resolve_sampler, sample_incidence
+from repro.graphs.csr import (CSRGraph, padded_adjacency,
+                              padded_forward_adjacency)
 
 
 class OPIMResult(NamedTuple):
@@ -52,17 +53,22 @@ def opim(g: CSRGraph, k: int, eps: float, key, *, model: str = "IC",
          selector: Optional[Selector] = None, solver_alpha: float = None,
          theta0: int = 256, max_theta: int = 1 << 16, max_steps: int = 32,
          fail_prob: float = 1.0 / 128.0,
-         solver: str = "scan") -> OPIMResult:
+         solver: str = "scan", sampler: str = "dense",
+         coin_chunk: int = 32) -> OPIMResult:
     """OPIM-C driver.  ``solver_alpha`` is the worst-case approximation
     of the selector (used for the OPT upper bound); defaults to the
     greedy 1 - 1/e.  ``solver`` picks the max-k-cover path of the
     default greedy selector ("scan" | "fused" | "resident" | "lazy");
-    ignored when an explicit ``selector`` is passed."""
+    ignored when an explicit ``selector`` is passed.  ``sampler`` picks
+    the S1 RRR sampling path ("dense" | "packed" | "kernel", all
+    bit-identical; see ``repro.core.rrr``)."""
     selector = selector or make_greedy_selector(solver)
+    sampler = resolve_sampler(sampler)
     if solver_alpha is None:
         solver_alpha = 1.0 - 1.0 / math.e
     n = g.num_vertices
     nbr, prob, wt = padded_adjacency(g)
+    fwd = padded_forward_adjacency(g) if sampler != "dense" else None
     target = solver_alpha - eps
     i_max = max(1, int(math.ceil(math.log2(max_theta / max(theta0, 1)))) + 1)
     delta = fail_prob / (3.0 * i_max)
@@ -77,11 +83,13 @@ def opim(g: CSRGraph, k: int, eps: float, key, *, model: str = "IC",
             inc1 = sample_incidence(nbr, prob, wt,
                                     jax.random.fold_in(key, 2 * i),
                                     theta=add, n=n, model=model,
-                                    max_steps=max_steps)
+                                    max_steps=max_steps, sampler=sampler,
+                                    fwd=fwd, coin_chunk=coin_chunk)
             inc2 = sample_incidence(nbr, prob, wt,
                                     jax.random.fold_in(key, 2 * i + 1),
                                     theta=add, n=n, model=model,
-                                    max_steps=max_steps)
+                                    max_steps=max_steps, sampler=sampler,
+                                    fwd=fwd, coin_chunk=coin_chunk)
             r1 = inc1 if r1 is None else jnp.concatenate([r1, inc1], 1)
             r2 = inc2 if r2 is None else jnp.concatenate([r2, inc2], 1)
             theta = new_theta

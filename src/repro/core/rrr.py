@@ -1,22 +1,65 @@
 """Batched Random-Reverse-Reachable (RRR) set sampling.
 
-TPU adaptation of the paper's per-rank probabilistic BFS (§3.4 S1): the
-frontier/visited state of a *batch* of samples is a dense bool matrix
-``[batch, n]`` and one BFS expansion is a fused gather/coin-flip/scatter
-over the padded reverse adjacency — fixed shapes, no pointers, VPU
-friendly.  Each expansion re-draws edge coins; under IC an edge is
-examined exactly once (its source is in the frontier exactly once), so
-per-step redraws are distributionally identical to a live-edge graph.
+TPU adaptation of the paper's per-rank probabilistic BFS (§3.4 S1).
+Three execution paths share bit-identical semantics (same PRNG key ⇒
+identical packed incidence), the ``sampler=`` analogue of the sender's
+``solver=`` quad:
+
+  * ``sampler="dense"``  — frontier/visited state of a *batch* of
+    samples is a dense bool matrix ``[batch, n]`` and one BFS expansion
+    is a fused gather/coin-flip/scatter over the padded reverse
+    adjacency (``hit.at[...].max``).  The reference path.
+  * ``sampler="packed"`` — frontier/visited live as word-packed uint32
+    ``[n, batch/32]`` for the whole BFS (32 samples per word, 8x fewer
+    state bytes than bool) and the expansion is a *gather* over the
+    padded **forward** adjacency:
+    ``hit_word[u] |= frontier_word[v] & coin_mask_word[v, rev_slot]``
+    for every forward pair ``(v, rev_slot)`` of ``u``.  Coin masks are
+    the dense path's per-step coins packed over the batch lane — coins
+    are drawn with the exact same keys/shapes/order, so
+    ``pack(visited_dense.T) == visited_packed`` bit-for-bit.  The
+    sampled incidence ``[n, W]`` is emitted directly: the ``[theta, n]``
+    bool intermediate and the final ``pack_bool_matrix(vis.T)``
+    transpose of the dense path disappear.
+  * ``sampler="kernel"`` — the packed path with the hot expansion step
+    fused into ONE Pallas launch per BFS step
+    (``repro.kernels.rrr_expand``): frontier/visited words stay
+    VMEM-resident while ``fwd_nbr`` index tiles and the pre-gathered
+    packed coin-mask tiles stream HBM→VMEM double-buffered; gather +
+    AND + OR-accumulate + the new/visited updates fuse so the gathered
+    ``[n, d_out, W]`` frontier intermediate never touches HBM.
+    Bit-exact to the packed JAX path (identical word algebra).
+
+Each expansion re-draws edge coins; under IC an edge is examined
+exactly once (its source is in the frontier exactly once), so per-step
+redraws are distributionally identical to a live-edge graph.
 
 LT uses the live-edge equivalence of Kempe et al.: every vertex selects
 at most one incoming edge (with probability = its weight); the RRR set
 is the chain of selected in-neighbors — this is why LT traversals are
-shallower, matching the paper's observation (§4.2).
+shallower, matching the paper's observation (§4.2).  The packed LT
+expansion reuses the IC machinery with the coin mask replaced by the
+packed one-hot edge-selection mask, so both models share one gather
+engine (and one Pallas kernel).
+
+``coin_chunk`` bounds the IC coin draw (and the LT selection-mask
+pack) to ``[batch, n, coin_chunk]`` slots at a time, so the bool coin
+intermediate is O(batch * n * coin_chunk) — not O(batch * n * d_max)
+— on every sampler; essential for skewed-degree graphs.  The packed
+samplers additionally accumulate the word-packed
+``[n, d_max, batch/32]`` per-step slot mask (each chunk packs over
+the batch lane immediately, so the mask costs batch/8 bytes per edge
+slot — 1/8 of an unchunked bool mask — but its d_max axis is *not*
+bounded by coin_chunk; on extreme-degree graphs the dense sampler is
+currently the lower-peak-memory choice).  The chunk width is part of
+the PRNG stream under IC (coins fold in the chunk index), so it acts
+like a seed: dense/packed/kernel parity holds at any fixed value, but
+changing it changes the sampled sets.
 """
 from __future__ import annotations
 
 import functools
-from typing import Literal
+from typing import Literal, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,37 +67,86 @@ import numpy as np
 from jax import lax
 
 from repro.core import bitset
-from repro.graphs.csr import CSRGraph, padded_adjacency
+from repro.graphs.csr import (CSRGraph, padded_adjacency,
+                              padded_forward_adjacency)
 
 Model = Literal["IC", "LT"]
 
+SAMPLERS = ("dense", "packed", "kernel")
 
-@functools.partial(jax.jit, static_argnames=("model", "max_steps"))
-def rrr_batch(nbr, prob, wt, roots, key, *, model: str, max_steps: int = 64):
+
+def resolve_sampler(sampler: Optional[str], default: str = "dense") -> str:
+    """Validate the S1 sampler triad (mirrors ``maxcover.resolve_solver``)."""
+    if sampler is None:
+        sampler = default
+    if sampler not in SAMPLERS:
+        raise ValueError(
+            f"unknown sampler {sampler!r}; expected one of {SAMPLERS}")
+    return sampler
+
+
+def _require_fwd(fwd, sampler: str):
+    if fwd is None:
+        raise ValueError(
+            f"sampler={sampler!r} needs fwd=(fwd_nbr, fwd_rslot) — the "
+            "padded forward adjacency from "
+            "repro.graphs.csr.padded_forward_adjacency(g)")
+    return fwd
+
+
+def _coin_chunks(d: int, coin_chunk: int) -> Tuple[int, int, int]:
+    """(chunk, n_chunks, d_pad) of the degree-chunked coin draw."""
+    if coin_chunk < 1:
+        raise ValueError(f"coin_chunk must be >= 1, got {coin_chunk}")
+    chunk = min(d, coin_chunk)
+    n_chunks = (d + chunk - 1) // chunk
+    return chunk, n_chunks, n_chunks * chunk
+
+
+@functools.partial(
+    jax.jit, static_argnames=("model", "max_steps", "sampler", "coin_chunk"))
+def rrr_batch(nbr, prob, wt, roots, key, *, model: str, max_steps: int = 64,
+              sampler: str = "dense", fwd=None, coin_chunk: int = 32):
     """Generate one batch of RRR sets.
 
     Args:
       nbr/prob/wt: padded reverse adjacency [n, d] (row v = in-nbrs of v).
       roots: int32 [batch] source vertices (chosen uniformly by caller).
       key: PRNG key.
+      sampler: "dense" | "packed" | "kernel" (see module docstring).
+        The packed paths need ``fwd=(fwd_nbr, fwd_rslot)`` and return
+        the *same* dense bool matrix (unpacked from the word state) —
+        a parity/compat shim; the memory win lives in
+        :func:`sample_incidence`, which keeps the words packed.
+      coin_chunk: IC coin-draw slot width (peak coin memory is
+        O(batch * n * coin_chunk); part of the PRNG stream — see
+        module docstring).
     Returns:
       visited: bool [batch, n]; visited[i, v] <=> v in RRR(roots[i]).
     """
+    sampler = resolve_sampler(sampler)
+    if sampler != "dense":
+        fwd_nbr, fwd_rslot = _require_fwd(fwd, sampler)
+        packed = _rrr_batch_packed(
+            nbr, prob, wt, fwd_nbr, fwd_rslot, roots, key, model=model,
+            max_steps=max_steps, coin_chunk=coin_chunk,
+            kernel=(sampler == "kernel"))
+        return bitset.unpack_words(packed, roots.shape[0]).T
+
     n, d = nbr.shape
     batch = roots.shape[0]
     visited0 = jnp.zeros((batch, n), dtype=bool).at[
         jnp.arange(batch), roots].set(True)
+    if d == 0:          # edgeless graph: RRR(root) = {root}
+        return visited0
 
     valid = nbr >= 0
-    tgt = jnp.where(valid, nbr, n).reshape(-1)  # padded slots -> dump row n
 
     if model == "IC":
         # degree-chunked expansion: coins are drawn [batch, n, CHUNK]
         # at a time so peak memory is O(batch * n * CHUNK), not
         # O(batch * n * d_max) — essential for skewed-degree graphs.
-        chunk = min(d, 32)
-        n_chunks = (d + chunk - 1) // chunk
-        d_pad = n_chunks * chunk
+        chunk, n_chunks, d_pad = _coin_chunks(d, coin_chunk)
         if d_pad != d:
             prob_p = jnp.pad(prob, ((0, 0), (0, d_pad - d)))
             tgt_p = jnp.pad(jnp.where(valid, nbr, n),
@@ -115,28 +207,205 @@ def rrr_batch(nbr, prob, wt, roots, key, *, model: str, max_steps: int = 64):
     return visited
 
 
+def _packed_roots(roots, n: int):
+    """Packed root incidence: bit i of word i//32 set at row roots[i].
+
+    Scatter-add of distinct single-bit contributions — each sample is
+    one unique bit, so add == OR even when roots repeat.
+    """
+    batch = roots.shape[0]
+    w = bitset.num_words(batch)
+    i = jnp.arange(batch)
+    contrib = jnp.uint32(1) << (i % bitset.WORD_BITS).astype(jnp.uint32)
+    return jnp.zeros((n, w), dtype=bitset.WORD_DTYPE).at[
+        roots, i // bitset.WORD_BITS].add(contrib)
+
+
+def _pack_batch_lane(fire, n: int, chunk: int, batch: int):
+    """Pack a bool [batch, n, chunk] slot-mask over its batch axis
+    into uint32 words [n, chunk, W]: bit j of word w at [v, slot] is
+    fire[w*32+j, v, slot]."""
+    w = bitset.num_words(batch)
+    flat = fire.transpose(1, 2, 0).reshape(n * chunk, batch)
+    return bitset.pack_bool_matrix(flat).reshape(n, chunk, w)
+
+
+def _expand_packed(frontier, visited, fwd_nbr, fwd_rslot, mask,
+                   kernel: bool):
+    """One packed BFS expansion: gather over the forward adjacency.
+
+    frontier/visited: uint32 [n, W] packed state.
+    mask: uint32 [n, d_pad, W] per-step packed coin/selection masks
+      (bit b of mask[v, slot] = "sample b's traversal crosses reverse
+      edge slot ``slot`` of v this step").
+    Returns (new, visited | new).
+
+    The ``[n, d_out, W]`` pre-gathered mask ``gmask`` is built here in
+    XLA either way (it is per-step random data: drawn, packed, gathered
+    and consumed once); the ``kernel`` path then fuses the *frontier*
+    gather + AND + OR-accumulate + new/visited updates into one Pallas
+    launch so the gathered frontier intermediate and the hit/new
+    elementwise passes never round-trip HBM.
+    """
+    valid = fwd_nbr >= 0
+    nbr_c = jnp.where(valid, fwd_nbr, 0)
+    gmask = jnp.where(valid[:, :, None],
+                      mask[nbr_c, jnp.clip(fwd_rslot, 0)],
+                      jnp.uint32(0))                       # [n, df, W]
+    if kernel:
+        from repro.kernels import ops as kops
+        return kops.rrr_expand_step(frontier, visited, nbr_c, gmask)
+    hit = bitset.or_reduce(frontier[nbr_c] & gmask, axis=1)  # [n, W]
+    new = hit & ~visited
+    return new, visited | new
+
+
+def _rrr_batch_packed(nbr, prob, wt, fwd_nbr, fwd_rslot, roots, key, *,
+                      model: str, max_steps: int, coin_chunk: int,
+                      kernel: bool):
+    """The packed BFS engine shared by sampler="packed" and "kernel"."""
+    n, d = nbr.shape
+    batch = roots.shape[0]
+    visited0 = _packed_roots(roots, n)
+    if d == 0:          # edgeless graph: RRR(root) = {root}
+        return visited0
+    valid = nbr >= 0
+    chunk, n_chunks, d_pad = _coin_chunks(d, coin_chunk)
+
+    if model == "IC":
+        prob_p = (jnp.pad(prob, ((0, 0), (0, d_pad - d)))
+                  if d_pad != d else prob)
+
+        def step_mask(sub):
+            # Bit-identical coins to the dense path: same fold_in(sub,
+            # c) keys, same [batch, n, chunk] draw shape and order;
+            # each chunk packs over the batch lane immediately so the
+            # bool slot-mask never exceeds one chunk.
+            def one(c, m):
+                coins = jax.random.uniform(
+                    jax.random.fold_in(sub, c), (batch, n, chunk))
+                p_c = lax.dynamic_slice(prob_p, (0, c * chunk),
+                                        (n, chunk))
+                fire = coins < p_c[None]                # [b, n, chunk]
+                pk = _pack_batch_lane(fire, n, chunk, batch)
+                return lax.dynamic_update_slice(m, pk, (0, c * chunk, 0))
+
+            mask0 = jnp.zeros((n, d_pad, bitset.num_words(batch)),
+                              dtype=bitset.WORD_DTYPE)
+            return lax.fori_loop(0, n_chunks, one, mask0)
+    else:  # LT live-edge selection mask
+        cumw = jnp.cumsum(wt, axis=1)                      # [n, d]
+        in_deg = jnp.sum(valid, axis=1)                    # [n]
+
+        def step_mask(sub):
+            r = jax.random.uniform(sub, (batch, n))        # same draw
+            chosen = jnp.sum(r[:, :, None] >= cumw[None], axis=-1)
+
+            # sel[b, v, slot] = (chosen == slot) & (slot < in_deg[v]):
+            # the packed one-hot of the dense path's pick_nbr scatter
+            # (slot < in_deg implies nbr[v, slot] >= 0).
+            def one(c, m):
+                slots = c * chunk + jnp.arange(chunk)
+                sel = ((chosen[:, :, None] == slots[None, None]) &
+                       (slots[None, None] < in_deg[None, :, None]))
+                pk = _pack_batch_lane(sel, n, chunk, batch)
+                return lax.dynamic_update_slice(m, pk, (0, c * chunk, 0))
+
+            mask0 = jnp.zeros((n, d_pad, bitset.num_words(batch)),
+                              dtype=bitset.WORD_DTYPE)
+            return lax.fori_loop(0, n_chunks, one, mask0)
+
+    def body(state):
+        frontier, visited, k, step = state
+        k, sub = jax.random.split(k)
+        new, visited = _expand_packed(frontier, visited, fwd_nbr,
+                                      fwd_rslot, step_mask(sub), kernel)
+        return new, visited, k, step + 1
+
+    def cond(state):
+        frontier, _, _, step = state
+        return jnp.any(frontier) & (step < max_steps)
+
+    _, visited, _, _ = jax.lax.while_loop(
+        cond, body, (visited0, visited0, key, 0))
+    return visited
+
+
+@functools.partial(
+    jax.jit, static_argnames=("model", "max_steps", "coin_chunk", "expand"))
+def rrr_batch_packed(nbr, prob, wt, fwd_nbr, fwd_rslot, roots, key, *,
+                     model: str, max_steps: int = 64, coin_chunk: int = 32,
+                     expand: str = "jax"):
+    """Packed-state RRR batch: word-packed incidence [n, W] directly.
+
+    ``(fwd_nbr, fwd_rslot)`` is the padded forward adjacency
+    (:func:`repro.graphs.csr.padded_forward_adjacency`).  ``expand``
+    picks the expansion engine: "jax" (pure-XLA gather) or "kernel"
+    (one fused Pallas launch per BFS step).  Both are bit-identical to
+    each other and to ``pack_bool_matrix(rrr_batch(...).T)`` of the
+    dense path under the same key/coin_chunk.
+
+    Returns: uint32 [n, ceil(batch/32)]; bit i of word i//32 at row v
+    is set iff v in RRR(roots[i]).
+    """
+    if expand not in ("jax", "kernel"):
+        raise ValueError(f"expand must be 'jax' or 'kernel', got {expand!r}")
+    return _rrr_batch_packed(nbr, prob, wt, fwd_nbr, fwd_rslot, roots,
+                             key, model=model, max_steps=max_steps,
+                             coin_chunk=coin_chunk,
+                             kernel=(expand == "kernel"))
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("theta", "model", "max_steps", "n"))
+                   static_argnames=("theta", "model", "max_steps", "n",
+                                    "sampler", "coin_chunk"))
 def sample_incidence(nbr, prob, wt, key, *, theta: int, n: int,
-                     model: str, max_steps: int = 64):
+                     model: str, max_steps: int = 64,
+                     sampler: str = "dense", fwd=None,
+                     coin_chunk: int = 32):
     """Sample ``theta`` RRR sets, return packed incidence X [n, W].
 
     Bit i of X[v] is set iff v is in RRR sample i.  theta must be a
     multiple of 32 (callers round up) so rows pack without straddling.
+
+    ``sampler="packed"|"kernel"`` (requires ``fwd``) runs the BFS on
+    word-packed state and emits X *directly* — the dense path's
+    [theta, n] bool visited matrix and its pack/transpose epilogue
+    never materialize.  All samplers are bit-identical for the same
+    key and ``coin_chunk``.
     """
     assert theta % bitset.WORD_BITS == 0
+    sampler = resolve_sampler(sampler)
     kr, kb = jax.random.split(key)
     roots = jax.random.randint(kr, (theta,), 0, n)
-    visited = rrr_batch(nbr, prob, wt, roots, kb,
-                        model=model, max_steps=max_steps)  # [theta, n]
-    return bitset.pack_bool_matrix(visited.T)  # [n, W]
+    if sampler == "dense":
+        visited = rrr_batch(nbr, prob, wt, roots, kb, model=model,
+                            max_steps=max_steps,
+                            coin_chunk=coin_chunk)  # [theta, n]
+        return bitset.pack_bool_matrix(visited.T)  # [n, W]
+    fwd_nbr, fwd_rslot = _require_fwd(fwd, sampler)
+    return rrr_batch_packed(
+        nbr, prob, wt, fwd_nbr, fwd_rslot, roots, kb, model=model,
+        max_steps=max_steps, coin_chunk=coin_chunk,
+        expand=("kernel" if sampler == "kernel" else "jax"))
 
 
 def sample_incidence_host(g: CSRGraph, theta: int, key, model: Model = "IC",
-                          max_steps: int = 64, batch: int = 256):
-    """Host-side convenience: batch over theta to bound peak memory."""
+                          max_steps: int = 64, batch: int = 256,
+                          sampler: str = "dense", coin_chunk: int = 32):
+    """Host-side convenience: batch over theta to bound peak memory.
+
+    ``theta`` is rounded up to a whole number of 32-bit words and the
+    returned incidence is trimmed to exactly that many columns — the
+    reported theta (second return value) always equals
+    ``32 * X.shape[1]``, even when a tail batch was rounded up to pack
+    whole words.  The packed samplers build the forward adjacency here
+    once and reuse it across batches.
+    """
+    sampler = resolve_sampler(sampler)
     theta = int(np.ceil(theta / bitset.WORD_BITS) * bitset.WORD_BITS)
     nbr, prob, wt = padded_adjacency(g)
+    fwd = (padded_forward_adjacency(g) if sampler != "dense" else None)
     n = g.num_vertices
     chunks = []
     done = 0
@@ -146,7 +415,10 @@ def sample_incidence_host(g: CSRGraph, theta: int, key, model: Model = "IC",
         b = int(np.ceil(b / bitset.WORD_BITS) * bitset.WORD_BITS)
         sub = jax.random.fold_in(key, i)
         chunks.append(sample_incidence(nbr, prob, wt, sub, theta=b, n=n,
-                                       model=model, max_steps=max_steps))
+                                       model=model, max_steps=max_steps,
+                                       sampler=sampler, fwd=fwd,
+                                       coin_chunk=coin_chunk))
         done += b
         i += 1
-    return jnp.concatenate(chunks, axis=1), done  # [n, W_total], theta
+    x = jnp.concatenate(chunks, axis=1)[:, :bitset.num_words(theta)]
+    return x, theta  # [n, W], the rounded theta (= 32 * W exactly)

@@ -1,2 +1,3 @@
-from repro.graphs.csr import CSRGraph, from_edge_list, padded_adjacency
+from repro.graphs.csr import (CSRGraph, from_edge_list, padded_adjacency,
+                              padded_forward_adjacency)
 from repro.graphs import generators

@@ -94,6 +94,55 @@ def to_dense_prob(g: CSRGraph) -> np.ndarray:
     return dense
 
 
+def padded_forward_adjacency(g: CSRGraph, pad_to: Optional[int] = None,
+                             rev_pad_to: Optional[int] = None):
+    """Padded *forward* adjacency: for each out-edge of ``u`` the
+    ``(v, rev_slot)`` pair naming its reverse-adjacency coin.
+
+    Row ``u`` lists, for every edge ``u -> v`` of the original graph,
+    the destination ``v`` together with the slot index of that edge in
+    ``v``'s :func:`padded_adjacency` row (``nbr[v, rev_slot] == u``).
+    This is the gather table of the packed RRR sampler: one BFS
+    expansion becomes ``hit[u] |= frontier[v] & coin_mask[v, rev_slot]``
+    over the forward slots of ``u`` — a gather instead of the dense
+    sampler's scatter.
+
+    Returns ``(fwd_nbr, fwd_rslot)`` int32 ``[n, d_out_max]`` arrays,
+    padded with ``fwd_nbr = -1`` (``fwd_rslot = 0`` at pads; masked by
+    the -1).  ``pad_to`` fixes the forward width (extra edges beyond it
+    are dropped, mirroring ``padded_adjacency``'s truncation);
+    ``rev_pad_to`` drops edges whose reverse slot falls beyond a
+    truncated reverse width, keeping the pair of tables consistent when
+    ``padded_adjacency(g, pad_to=...)`` was called with a width below
+    the max in-degree.
+    """
+    n = g.num_vertices
+    indptr = np.asarray(g.indptr).astype(np.int64)
+    src = np.asarray(g.indices).astype(np.int64)
+    in_deg = np.diff(indptr)
+    rev_v = np.repeat(np.arange(n, dtype=np.int64), in_deg)
+    rev_slot = np.arange(src.shape[0], dtype=np.int64) - np.repeat(
+        indptr[:-1], in_deg)
+    if rev_pad_to is not None:
+        keep = rev_slot < int(rev_pad_to)
+        src, rev_v, rev_slot = src[keep], rev_v[keep], rev_slot[keep]
+    order = np.argsort(src, kind="stable")
+    src, rev_v, rev_slot = src[order], rev_v[order], rev_slot[order]
+    out_deg = (np.bincount(src, minlength=n) if src.size
+               else np.zeros(n, dtype=np.int64))
+    df = int(pad_to if pad_to is not None
+             else (out_deg.max() if src.size else 0))
+    fwd_nbr = np.full((n, df), -1, dtype=np.int32)
+    fwd_rslot = np.zeros((n, df), dtype=np.int32)
+    fptr = np.zeros(n + 1, dtype=np.int64)
+    fptr[1:] = np.cumsum(out_deg)
+    pos = np.arange(src.shape[0], dtype=np.int64) - fptr[src]
+    ok = pos < df
+    fwd_nbr[src[ok], pos[ok]] = rev_v[ok]
+    fwd_rslot[src[ok], pos[ok]] = rev_slot[ok]
+    return jnp.asarray(fwd_nbr), jnp.asarray(fwd_rslot)
+
+
 def padded_adjacency(g: CSRGraph, pad_to: Optional[int] = None):
     """Convert CSR to padded [n, d_max] neighbor/prob/weight arrays.
 

@@ -7,6 +7,10 @@ bucket_insert.py  fused chunked receiver: a whole candidate chunk
                   the bucket covers VMEM-resident (gains + accept +
                   cover OR-update + seed-slot write fused)
 topk_gain.py      fused gain + blockwise argmax (greedy inner loop)
+rrr_expand.py     fused packed RRR BFS expansion (sampler S1): one
+                  pallas_call per BFS step with frontier/visited
+                  words VMEM-resident and (fwd_nbr, coin-mask) tiles
+                  streamed double-buffered
 
 Each kernel ships with ref.py (pure-jnp oracle) and ops.py (backend-
 aware jit wrappers).  Validated under interpret=True on CPU; compiled

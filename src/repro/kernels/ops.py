@@ -17,6 +17,7 @@ from repro.kernels.bucket_insert import (bucket_insert_chunk_pallas,
 from repro.kernels.coverage import marginal_gain_pallas
 from repro.kernels.greedy_pick import greedy_maxcover_resident_pallas
 from repro.kernels.lazy_greedy import greedy_maxcover_lazy_pallas
+from repro.kernels.rrr_expand import rrr_expand_step_pallas
 from repro.kernels.topk_gain import best_gain_index_pallas
 
 
@@ -55,6 +56,16 @@ def greedy_maxcover_lazy(rows: jnp.ndarray, k: int):
     beat the running best gain.  Returns the resident tuple plus a
     ``tiles_swept`` counter (skip ratio = swept / (k * num_tiles))."""
     return greedy_maxcover_lazy_pallas(rows, k, interpret=_interpret())
+
+
+def rrr_expand_step(frontier: jnp.ndarray, visited: jnp.ndarray,
+                    fwd_nbr: jnp.ndarray, gmask: jnp.ndarray):
+    """Fused packed RRR BFS expansion step (the ``sampler="kernel"``
+    engine): frontier/visited words VMEM-resident, forward-index and
+    packed coin-mask tiles streamed double-buffered, gather + AND +
+    OR-accumulate + new/visited updates in ONE pallas_call per step."""
+    return rrr_expand_step_pallas(frontier, visited, fwd_nbr, gmask,
+                                  interpret=_interpret())
 
 
 def bucket_insert_chunk(seed_ids: jnp.ndarray, rows: jnp.ndarray,

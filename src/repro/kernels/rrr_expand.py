@@ -1,0 +1,195 @@
+"""Pallas TPU kernel: fused packed RRR BFS expansion — one gather +
+AND + OR-accumulate step per launch.
+
+The sampler (S1) hot path.  The packed JAX expansion
+(``repro.core.rrr._expand_packed``) materializes three [n, d_out, W]
+word tensors per BFS step — the gathered frontier rows, their AND with
+the gathered coin masks, and the pre-reduction contributions — plus
+the hit/new/visited elementwise passes, each round-tripping HBM.  Here
+one BFS step is ONE pallas_call:
+
+  * the frontier and visited word matrices ([n, W] uint32 — 32 samples
+    per word) are VMEM-resident for the whole step; the frontier is
+    gathered *inside* the kernel at the streamed forward-neighbor
+    indices, so the [n, d_out, W] gathered-frontier tensor never
+    exists outside VMEM tile scope;
+  * the forward-adjacency index tiles (``fwd_nbr``, int32 [BV, d_out])
+    and the pre-gathered packed coin-mask tiles (``gmask``, uint32
+    [BV, d_out, W] — the per-step coins packed over the batch lane and
+    gathered to forward order by XLA, where they are produced) stream
+    HBM→VMEM through double-buffered ``pltpu.make_async_copy`` pairs
+    (tile t+1 DMAs in while tile t's gather/OR computes) — the same
+    pipeline pattern as the resident sender (``greedy_pick.py``) and
+    the streaming receiver;
+  * gather + AND + OR-accumulate + the ``new = hit & ~visited`` /
+    ``visited |= new`` updates fuse into the tile body; the outputs
+    (next frontier = new, updated visited) are written tile-by-tile.
+
+Adaptation note vs the issue sketch: the ``rev_slot`` half of the
+forward pair is consumed by the XLA-side mask gather that *builds* the
+streamed gmask tiles (coin masks are fresh random data every step —
+drawn, packed, gathered, and consumed exactly once, so gathering them
+where they are produced adds no extra HBM round-trip); the kernel
+streams the resulting (fwd_nbr, gmask) tile pairs and keeps the
+*frontier* gather — the term that would otherwise re-materialize per
+step — fused.  Keeping the [n, d, W] slot-mask VMEM-resident instead
+and gathering both halves in-kernel is the ROADMAP follow-up for real
+hardware; it trades O(n * d * W) VMEM for the gmask stream.
+
+Mosaic caveats (the ROADMAP TPU timing item covers both on hardware):
+the in-kernel gather reads frontier rows at traced indices
+(``jnp.take`` with an [BV, d_out] index tile into the VMEM-resident
+[n, W] frontier) — the interpret path (this container's validation
+mode) handles that directly; real-TPU lowering would route it through
+the dynamic-gather unit or fall back to per-row DMA.  And the
+double-buffered gmask scratch spans the full forward-degree axis
+(2 * BV * d_out * W words), so heavy-hub graphs need the d_out axis
+tiled into the stream (an inner accumulation loop over forward-slot
+chunks — OR-accumulation is order-free, so exactness is unaffected)
+before the buffer fits a ~16 MiB VMEM budget.
+
+Bit-exactness: the kernel computes exactly the packed JAX path's word
+algebra (gather, AND, OR-reduce over the forward-slot axis, AND-NOT,
+OR) — OR is associative/commutative so tile order cannot matter, and
+zero padding is exact: padded vertex rows have all-zero gmask (hit 0),
+padded word lanes carry zero bits through every op, and padded
+``fwd_nbr`` entries are pre-clipped to row 0 with a zeroed gmask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import bitset
+from repro.kernels import gain_core
+
+BLOCK_V = 128
+
+
+def _kernel(nbr_hbm, gmask_hbm, frontier_ref, visited_ref,
+            newf_ref, visout_ref, nbr_buf, gm_buf, nbr_sem, gm_sem, *,
+            block_v: int, df: int, w: int):
+    """One program: a whole packed BFS expansion step.
+
+    nbr_hbm     int32  [n_pad, df]      HBM/ANY — streamed index tiles
+    gmask_hbm   uint32 [n_pad, GQ]      HBM/ANY — streamed mask tiles,
+                                        (df, w) flattened into one
+                                        lane-padded axis (GQ =
+                                        pad(df*w, LANE)) so lane
+                                        padding amortizes over the
+                                        whole per-vertex mask instead
+                                        of inflating every slot's W
+                                        words to a full lane
+    frontier_ref uint32 [n_pad, Wp]     VMEM in (gathered at nbr tiles)
+    visited_ref uint32 [n_pad, Wp]      VMEM in
+    newf_ref    uint32 [n_pad, Wp]      VMEM out (next frontier)
+    visout_ref  uint32 [n_pad, Wp]      VMEM out (visited | new)
+    nbr_buf     int32  [2, BV, df]      double-buffered index scratch
+    gm_buf      uint32 [2, BV, GQ]      double-buffered mask scratch
+    """
+    n_pad, wp = frontier_ref.shape
+    num_tiles = n_pad // block_v
+
+    def tile_dmas(slot, t):
+        return (pltpu.make_async_copy(
+                    nbr_hbm.at[pl.ds(t * block_v, block_v)],
+                    nbr_buf.at[slot], nbr_sem.at[slot]),
+                pltpu.make_async_copy(
+                    gmask_hbm.at[pl.ds(t * block_v, block_v)],
+                    gm_buf.at[slot], gm_sem.at[slot]))
+
+    for dma in tile_dmas(0, 0):
+        dma.start()
+
+    def tile_body(t, _):
+        slot = jax.lax.rem(t, 2)
+
+        @pl.when(t + 1 < num_tiles)
+        def _prefetch():
+            for dma in tile_dmas(jax.lax.rem(t + 1, 2), t + 1):
+                dma.start()
+
+        for dma in tile_dmas(slot, t):
+            dma.wait()
+        # gather + AND + OR-accumulate, all in VMEM tile scope
+        gathered = jnp.take(frontier_ref[...], nbr_buf[slot],
+                            axis=0)[:, :, :w]              # [BV, df, w]
+        gm = gm_buf[slot][:, :df * w].reshape(block_v, df, w)
+        hit = bitset.or_reduce(gathered & gm, axis=1)      # [BV, w]
+        vis = visited_ref[pl.ds(t * block_v, block_v), :]
+        new = jnp.pad(hit, ((0, 0), (0, wp - w))) & ~vis
+        newf_ref[pl.ds(t * block_v, block_v), :] = new
+        visout_ref[pl.ds(t * block_v, block_v), :] = vis | new
+        return 0
+
+    jax.lax.fori_loop(0, num_tiles, tile_body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_v", "interpret"))
+def rrr_expand_step_pallas(frontier: jnp.ndarray, visited: jnp.ndarray,
+                           fwd_nbr: jnp.ndarray, gmask: jnp.ndarray,
+                           block_v: int = BLOCK_V,
+                           interpret: bool = False):
+    """Fused packed BFS expansion step:
+
+      frontier uint32 [n, W], visited uint32 [n, W],
+      fwd_nbr  int32  [n, df]    (pad entries pre-clipped to 0),
+      gmask    uint32 [n, df, W] (zero at padded forward slots)
+      -> (new_frontier uint32 [n, W], new_visited uint32 [n, W])
+
+    in a single pallas_call; bit-identical to the packed JAX path
+
+      hit = or_reduce(frontier[fwd_nbr] & gmask, axis=1)
+      new = hit & ~visited;  new_visited = visited | new.
+
+    Zero padding is exact (see module docstring); d_out = 0 graphs
+    short-circuit to an empty expansion.
+    """
+    n, w = frontier.shape
+    df = fwd_nbr.shape[1]
+    if df == 0:   # edgeless graph: nothing can fire
+        return jnp.zeros_like(frontier), visited
+    bv = gain_core.effective_block(n, block_v, gain_core.SUBLANE)
+    bv = gain_core.padded_size(bv, gain_core.SUBLANE)
+    n_pad = gain_core.padded_size(n, bv)
+    wp = gain_core.padded_size(w, gain_core.LANE)
+    # The mask stream flattens (df, w) into one lane axis before
+    # padding: GQ = pad(df*w, LANE), so the dominant per-step tensor
+    # carries at most one lane of zero padding per vertex (< 2x when
+    # df*w >= LANE) instead of padding every slot's w words to 128.
+    gq = gain_core.padded_size(df * w, gain_core.LANE)
+    gmask = jnp.pad(gmask.reshape(n, df * w), ((0, n_pad - n),
+                                               (0, gq - df * w)))
+    if n_pad != n or wp != w:
+        frontier = jnp.pad(frontier, ((0, n_pad - n), (0, wp - w)))
+        visited = jnp.pad(visited, ((0, n_pad - n), (0, wp - w)))
+        fwd_nbr = jnp.pad(fwd_nbr, ((0, n_pad - n), (0, 0)))
+    newf, viso = pl.pallas_call(
+        functools.partial(_kernel, block_v=bv, df=df, w=w),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+            pl.BlockSpec(memory_space=pltpu.VMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, wp), frontier.dtype),
+            jax.ShapeDtypeStruct((n_pad, wp), frontier.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, bv, df), jnp.int32),        # index double buf
+            pltpu.VMEM((2, bv, gq), frontier.dtype),   # mask double buf
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(fwd_nbr, gmask, frontier, visited)
+    return newf[:n, :w], viso[:n, :w]

@@ -21,7 +21,7 @@ import numpy as np
 from repro.core import greediris, imm, opim, theory
 from repro.core.diffusion import influence
 from repro.graphs import generators
-from repro.graphs.csr import padded_adjacency
+from repro.graphs.csr import padded_adjacency, padded_forward_adjacency
 from repro.launch.mesh import make_host_mesh
 
 
@@ -65,6 +65,23 @@ def main(argv=None):
                          "plus per-tile stale upper bounds — each pick "
                          "only re-sweeps tiles that can still beat the "
                          "running best); all four bit-identical")
+    ap.add_argument("--sampler", default="dense",
+                    choices=("dense", "packed", "kernel"),
+                    help="S1 RRR sampling path: 'dense' (bool "
+                         "[batch, n] BFS state, scatter expansion), "
+                         "'packed' (word-packed uint32 [n, batch/32] "
+                         "state — 8x fewer state bytes — with a "
+                         "gather expansion over the forward "
+                         "adjacency), or 'kernel' (packed plus ONE "
+                         "fused Pallas launch per BFS step); all "
+                         "three bit-identical for the same seed")
+    ap.add_argument("--coin-chunk", type=int, default=32,
+                    help="IC coin-draw slot width inside the sampler "
+                         "BFS (bounds the bool coin intermediate to "
+                         "~batch*n*chunk; the packed samplers also "
+                         "hold a [n, d_max, batch/32] packed slot "
+                         "mask this knob does not bound; part of the "
+                         "PRNG stream, i.e. acts like a seed)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="DEPRECATED: maps to --solver fused and "
                          "additionally routes the receiver through the "
@@ -100,13 +117,16 @@ def main(argv=None):
         mesh = make_host_mesh()
         m = mesh.shape["machines"]
         nbr, prob, wt = padded_adjacency(g)
+        fwd = (padded_forward_adjacency(g)
+               if args.sampler != "dense" else None)
         alpha = args.alpha if args.selector == "greediris-trunc" else 1.0
         fn, _, theta = greediris.build_round(
             mesh, ("machines",), n=n, theta=args.theta, k=args.k,
             max_degree=g.max_in_degree(), model=args.model,
             delta=args.delta, alpha_trunc=alpha, aggregate=args.aggregate,
             use_kernel=args.use_kernel, solver=solver,
-            chunk_size=chunk_size)
+            chunk_size=chunk_size, sampler=args.sampler, fwd=fwd,
+            coin_chunk=args.coin_chunk)
         out = jax.jit(fn)(nbr, prob, wt, key)
         seeds = np.asarray(out.seeds)
         print(f"[im] m={m} theta={theta} coverage={int(out.coverage)} "
@@ -128,14 +148,18 @@ def main(argv=None):
         }[args.selector]
         if args.use_opim:
             res = opim.opim(g, args.k, args.eps, key, model=args.model,
-                            selector=sel, max_theta=args.max_theta)
+                            selector=sel, max_theta=args.max_theta,
+                            sampler=args.sampler,
+                            coin_chunk=args.coin_chunk)
             seeds = res.seeds
             print(f"[im] OPIM rounds={res.rounds} theta={res.theta} "
                   f"guarantee={res.guarantee:.3f} "
                   f"sigma_l={res.sigma_lower:.1f}")
         else:
             res = imm.imm(g, args.k, args.eps, key, model=args.model,
-                          selector=sel, max_theta=args.max_theta)
+                          selector=sel, max_theta=args.max_theta,
+                          sampler=args.sampler,
+                          coin_chunk=args.coin_chunk)
             seeds = res.seeds
             print(f"[im] IMM rounds={res.rounds} theta={res.theta} "
                   f"coverage_frac={res.coverage_fraction:.4f}")

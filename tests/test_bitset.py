@@ -44,3 +44,37 @@ def test_union_and_popcount():
     a = jnp.asarray([0b1010], dtype=jnp.uint32)
     b = jnp.asarray([0b0110], dtype=jnp.uint32)
     assert int(bitset.coverage_size(bitset.union(a, b))) == 3
+
+
+def test_or_reduce_matches_numpy():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.integers(0, 2**32, (7, 5, 3), dtype=np.uint32))
+    got = bitset.or_reduce(x, axis=1)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.bitwise_or.reduce(np.asarray(x), axis=1))
+    # an empty reduction axis folds to the identity (all-zero words)
+    assert int(jnp.sum(bitset.or_reduce(x[:, :0], axis=1))) == 0
+
+
+def test_packed_nonzero_matches_dense_nonzero():
+    """packed_nonzero == jnp.nonzero on the dense [theta, n] transpose
+    (values AND order) whenever the pair count fits in ``size``."""
+    rng = np.random.default_rng(6)
+    dense = rng.random((37, 96)) < 0.15          # [n, theta]
+    words = bitset.pack_bool_matrix(jnp.asarray(dense))
+    total = int(dense.sum())
+    size = total + 13
+    s_got, v_got = bitset.packed_nonzero(words, size=size)
+    s_want, v_want = jnp.nonzero(jnp.asarray(dense.T), size=size,
+                                 fill_value=-1)
+    np.testing.assert_array_equal(np.asarray(s_got), np.asarray(s_want))
+    np.testing.assert_array_equal(np.asarray(v_got), np.asarray(v_want))
+
+
+def test_packed_nonzero_truncates_to_size():
+    words = jnp.full((4, 2), 0xFFFFFFFF, dtype=jnp.uint32)  # 256 bits
+    s, v = bitset.packed_nonzero(words, size=10)
+    assert s.shape == (10,) and v.shape == (10,)
+    assert bool(jnp.all(s >= 0)) and bool(jnp.all(v >= 0))
+    # sample-major: the first 10 pairs are samples 0..2 across vertices
+    assert bool(jnp.all(s[:-1] <= s[1:]))

@@ -209,6 +209,44 @@ def test_sender_solver_quad_bit_identical_on_mesh():
     assert "solver quad identical" in out
 
 
+def test_sampler_triad_bit_identical_on_mesh():
+    """S1 sampler routing: dense, packed, and kernel samplers feed the
+    whole distributed round identical packed incidence (same key =>
+    identical seeds/coverage), on both shuffle schedules; and
+    sampler="kernel" traces exactly one rrr_expand pallas_call (one
+    fused launch per BFS step — the while body traces once)."""
+    out = run_with_devices(_PRELUDE + textwrap.dedent("""
+        from repro.graphs.csr import padded_forward_adjacency
+        fwd = padded_forward_adjacency(g)
+        for shuffle in ("dense", "sparse"):
+            ref = None
+            for sampler in ("dense", "packed", "kernel"):
+                fn, _, _ = greediris.build_round(
+                    mesh, ("machines",), n=200, theta=512, k=8,
+                    max_degree=g.max_in_degree(), shuffle=shuffle,
+                    sampler=sampler,
+                    fwd=(None if sampler == "dense" else fwd))
+                o = jax.jit(fn)(nbr, prob, wt, key)
+                if ref is None:
+                    ref = (np.asarray(o.seeds), int(o.coverage))
+                else:
+                    np.testing.assert_array_equal(
+                        np.asarray(o.seeds), ref[0],
+                        err_msg=f"{shuffle}/{sampler}")
+                    assert int(o.coverage) == ref[1], (shuffle, sampler)
+            print(shuffle, "samplers identical", ref[1])
+        fn, _, _ = greediris.build_round(
+            mesh, ("machines",), n=200, theta=512, k=8,
+            max_degree=g.max_in_degree(), sampler="kernel", fwd=fwd)
+        jx = str(jax.make_jaxpr(fn)(nbr, prob, wt, key))
+        assert jx.count("pallas_call") == 1, jx.count("pallas_call")
+        print("kernel sampler single launch per step")
+    """))
+    assert "dense samplers identical" in out
+    assert "sparse samplers identical" in out
+    assert "single launch per step" in out
+
+
 def test_gather_receiver_issues_one_stream_call(monkeypatch):
     """Acceptance criterion: under the gather schedule with use_kernel,
     the whole m*kk candidate stream goes through exactly ONE

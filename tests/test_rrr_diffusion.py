@@ -77,3 +77,205 @@ def test_lt_influence_runs():
     s = float(influence(g, np.array([0]), jax.random.key(1), model="LT",
                         num_sims=16))
     assert 1.0 <= s <= 60.0
+
+
+# ---------------------------------------------------------------------
+# Packed / kernel sampler parity (tentpole acceptance criteria)
+# ---------------------------------------------------------------------
+import pytest
+
+from repro.core.rrr import rrr_batch_packed, sample_incidence
+from repro.graphs.csr import padded_forward_adjacency
+
+
+def _parity_graphs():
+    # non-word-aligned n, skewed degrees (star: hub in-degree 0,
+    # leaves in-degree 1... plus a preferential-attachment heavy tail)
+    return [generators.erdos_renyi(37, 4.0, seed=0),
+            generators.star(33),
+            generators.preferential_attachment(50, 3, seed=4)]
+
+
+@pytest.mark.parametrize("model", ("IC", "LT"))
+@pytest.mark.parametrize("batch,max_steps", ((64, 32), (40, 2)))
+def test_packed_sampler_bit_identical_to_dense(model, batch, max_steps):
+    """pack(dense_visited.T) == packed_visited bit-for-bit, across
+    non-word-aligned batch (pad bits stay zero), skewed degrees, and
+    max_steps cutoffs — same key => identical packed incidence."""
+    for g in _parity_graphs():
+        n = g.num_vertices
+        nbr, prob, wt = padded_adjacency(g)
+        fwd = padded_forward_adjacency(g)
+        roots = jax.random.randint(jax.random.key(7), (batch,), 0, n)
+        key = jax.random.key(5)
+        dense = rrr_batch(nbr, prob, wt, roots, key, model=model,
+                          max_steps=max_steps)
+        packed = rrr_batch_packed(nbr, prob, wt, *fwd, roots, key,
+                                  model=model, max_steps=max_steps)
+        np.testing.assert_array_equal(
+            np.asarray(bitset.pack_bool_matrix(dense.T)),
+            np.asarray(packed))
+
+
+@pytest.mark.parametrize("model", ("IC", "LT"))
+def test_kernel_sampler_bit_identical_to_packed(model):
+    """The fused Pallas expansion (expand="kernel") reproduces the
+    packed JAX path bit-for-bit (and hence the dense path)."""
+    g = generators.erdos_renyi(45, 5.0, seed=2)
+    nbr, prob, wt = padded_adjacency(g)
+    fwd = padded_forward_adjacency(g)
+    roots = jax.random.randint(jax.random.key(1), (64,), 0, 45)
+    key = jax.random.key(9)
+    jax_path = rrr_batch_packed(nbr, prob, wt, *fwd, roots, key,
+                                model=model, max_steps=8)
+    kern = rrr_batch_packed(nbr, prob, wt, *fwd, roots, key,
+                            model=model, max_steps=8, expand="kernel")
+    np.testing.assert_array_equal(np.asarray(jax_path), np.asarray(kern))
+
+
+def test_sample_incidence_sampler_triad_identical():
+    g = generators.erdos_renyi(60, 4.0, seed=3)
+    nbr, prob, wt = padded_adjacency(g)
+    fwd = padded_forward_adjacency(g)
+    key = jax.random.key(4)
+    want = sample_incidence(nbr, prob, wt, key, theta=96, n=60,
+                            model="IC", max_steps=8)
+    for sampler in ("packed", "kernel"):
+        got = sample_incidence(nbr, prob, wt, key, theta=96, n=60,
+                               model="IC", max_steps=8, sampler=sampler,
+                               fwd=fwd)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_rrr_batch_sampler_shim_returns_dense_bool():
+    """rrr_batch(sampler="packed") unpacks to the dense bool layout."""
+    g = generators.erdos_renyi(30, 3.0, seed=5)
+    nbr, prob, wt = padded_adjacency(g)
+    fwd = padded_forward_adjacency(g)
+    roots = jnp.arange(32)
+    key = jax.random.key(2)
+    dense = rrr_batch(nbr, prob, wt, roots, key, model="IC", max_steps=4)
+    via = rrr_batch(nbr, prob, wt, roots, key, model="IC", max_steps=4,
+                    sampler="packed", fwd=fwd)
+    assert via.dtype == jnp.bool_ and via.shape == dense.shape
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(via))
+
+
+def test_coin_chunk_threads_and_keeps_parity():
+    """coin_chunk is part of the IC PRNG stream (acts like a seed):
+    dense/packed stay bit-identical at any fixed value, and changing
+    it changes the sampled sets."""
+    g = generators.preferential_attachment(40, 4, seed=6)
+    nbr, prob, wt = padded_adjacency(g)
+    fwd = padded_forward_adjacency(g)
+    roots = jax.random.randint(jax.random.key(3), (32,), 0, 40)
+    key = jax.random.key(8)
+    outs = {}
+    for cc in (2, 32):
+        dense = rrr_batch(nbr, prob, wt, roots, key, model="IC",
+                          max_steps=6, coin_chunk=cc)
+        packed = rrr_batch_packed(nbr, prob, wt, *fwd, roots, key,
+                                  model="IC", max_steps=6, coin_chunk=cc)
+        np.testing.assert_array_equal(
+            np.asarray(bitset.pack_bool_matrix(dense.T)),
+            np.asarray(packed))
+        outs[cc] = np.asarray(packed)
+    assert not np.array_equal(outs[2], outs[32])
+
+
+def test_sample_incidence_host_trims_to_reported_theta():
+    """Satellite regression: a non-multiple-of-256 theta (tail batch
+    rounded up to whole words) must come back trimmed to the rounded
+    theta the function reports — 32 * X.shape[1] == theta, always."""
+    g = generators.erdos_renyi(40, 4.0, seed=7)
+    key = jax.random.key(0)
+    for batch in (96, 100):       # word-aligned and unaligned batches
+        x, theta = sample_incidence_host(g, 300, key, batch=batch)
+        assert theta == 320                      # ceil32(300)
+        assert x.shape == (40, theta // 32)
+    x256, theta256 = sample_incidence_host(g, 300, key)   # batch=256
+    assert theta256 == 320 and x256.shape[1] == 10
+
+
+def test_sample_incidence_host_packed_matches_dense():
+    g = generators.erdos_renyi(40, 4.0, seed=8)
+    key = jax.random.key(1)
+    want, theta_d = sample_incidence_host(g, 128, key, batch=64)
+    got, theta_p = sample_incidence_host(g, 128, key, batch=64,
+                                         sampler="packed")
+    assert theta_d == theta_p
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+# ---------------------------------------------------------------------
+# LT live-edge semantics (satellite)
+# ---------------------------------------------------------------------
+
+def _chain_graph(n):
+    """0 -> 1 -> ... -> n-1; each vertex has exactly one in-edge whose
+    LT weight normalizes to 1.0, so the live-edge chain is
+    deterministic."""
+    return from_edge_list(np.arange(n - 1), np.arange(1, n), n,
+                          probs=np.ones(n - 1, dtype=np.float32))
+
+
+def test_lt_chain_follows_exactly_one_in_edge():
+    """Live-edge chain semantics: with a single weight-1 in-edge per
+    vertex, RRR(root) under LT is exactly the ancestor chain
+    {0..root} — every vertex follows precisely one in-edge."""
+    n = 12
+    g = _chain_graph(n)
+    nbr, prob, wt = padded_adjacency(g)
+    roots = jnp.asarray([0, 3, n - 1])
+    vis = rrr_batch(nbr, prob, wt, roots, jax.random.key(0), model="LT",
+                    max_steps=n)
+    for i, r in enumerate([0, 3, n - 1]):
+        want = np.zeros(n, dtype=bool)
+        want[:r + 1] = True
+        np.testing.assert_array_equal(np.asarray(vis[i]), want)
+
+
+def test_lt_max_steps_truncation():
+    """max_steps cuts the chain after exactly max_steps expansions:
+    root + max_steps ancestors survive, dense and packed alike."""
+    n = 12
+    g = _chain_graph(n)
+    nbr, prob, wt = padded_adjacency(g)
+    fwd = padded_forward_adjacency(g)
+    roots = jnp.full((32,), n - 1, dtype=jnp.int32)
+    for steps in (1, 3):
+        vis = rrr_batch(nbr, prob, wt, roots, jax.random.key(1),
+                        model="LT", max_steps=steps)
+        sizes = np.asarray(vis).sum(axis=1)
+        np.testing.assert_array_equal(sizes, steps + 1)
+        assert bool(vis[0, n - 1]) and not bool(vis[0, n - 2 - steps])
+        packed = rrr_batch_packed(nbr, prob, wt, *fwd, roots,
+                                  jax.random.key(1), model="LT",
+                                  max_steps=steps)
+        np.testing.assert_array_equal(
+            np.asarray(bitset.pack_bool_matrix(vis.T)),
+            np.asarray(packed))
+
+
+def test_edgeless_graph_rrr_is_root_only():
+    """Review regression: d_max == 0 (no edges at all) must not crash
+    the coin-chunk solve — every sampler returns RRR(root) = {root}."""
+    g = from_edge_list(np.array([], dtype=np.int64),
+                       np.array([], dtype=np.int64), 5)
+    nbr, prob, wt = padded_adjacency(g)
+    fwd = padded_forward_adjacency(g)
+    assert nbr.shape == (5, 0) and fwd[0].shape == (5, 0)
+    roots = jnp.asarray([0, 3, 3, 4], dtype=jnp.int32)
+    for model in ("IC", "LT"):
+        dense = rrr_batch(nbr, prob, wt, roots, jax.random.key(0),
+                          model=model)
+        np.testing.assert_array_equal(
+            np.asarray(dense),
+            np.eye(5, dtype=bool)[np.asarray(roots)])
+        for expand in ("jax", "kernel"):
+            packed = rrr_batch_packed(nbr, prob, wt, *fwd, roots,
+                                      jax.random.key(0), model=model,
+                                      expand=expand)
+            np.testing.assert_array_equal(
+                np.asarray(bitset.pack_bool_matrix(dense.T)),
+                np.asarray(packed))

@@ -1,0 +1,113 @@
+"""Fused packed RRR expansion kernel (kernels/rrr_expand.py).
+
+Acceptance criteria pinned here:
+  * the kernel step is bit-identical to the packed JAX expansion
+    (gather + AND + OR-reduce + AND-NOT + OR) across non-tile-aligned
+    n / W, arbitrary forward degrees, and block_v choices;
+  * sampler="kernel" compiles to exactly ONE pallas_call per BFS step
+    (jaxpr assertion); "packed" and "dense" to zero.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitset
+from repro.kernels.rrr_expand import rrr_expand_step_pallas
+
+# Non-tile-aligned vertex/word counts on purpose (the kernel pads to
+# 8-sublane x 128-lane tiles internally).
+SHAPES = [(37, 5, 3), (130, 3, 1), (8, 1, 4), (64, 12, 2)]
+
+
+def _random_step(n, df, w, seed):
+    rng = np.random.default_rng(seed)
+    frontier = jnp.asarray(rng.integers(0, 2**32, (n, w), dtype=np.uint32)
+                           & rng.integers(0, 2**32, (n, w),
+                                          dtype=np.uint32))
+    visited = frontier | jnp.asarray(
+        rng.integers(0, 2**32, (n, w), dtype=np.uint32)
+        & rng.integers(0, 2**32, (n, w), dtype=np.uint32))
+    nbr = jnp.asarray(rng.integers(0, n, (n, df)), dtype=jnp.int32)
+    gmask = jnp.asarray(rng.integers(0, 2**32, (n, df, w),
+                                     dtype=np.uint32)
+                        & rng.integers(0, 2**32, (n, df, w),
+                                       dtype=np.uint32))
+    # zero out a few forward slots like padded adjacency entries do
+    pad = jnp.asarray(rng.random((n, df)) < 0.2)
+    gmask = jnp.where(pad[:, :, None], jnp.uint32(0), gmask)
+    return frontier, visited, nbr, gmask
+
+
+def _expand_ref(frontier, visited, nbr, gmask):
+    hit = bitset.or_reduce(frontier[nbr] & gmask, axis=1)
+    new = hit & ~visited
+    return new, visited | new
+
+
+@pytest.mark.parametrize("n,df,w", SHAPES)
+def test_expand_kernel_matches_jax(n, df, w):
+    frontier, visited, nbr, gmask = _random_step(n, df, w, seed=n + w)
+    want_new, want_vis = _expand_ref(frontier, visited, nbr, gmask)
+    got_new, got_vis = rrr_expand_step_pallas(frontier, visited, nbr,
+                                              gmask, interpret=True)
+    np.testing.assert_array_equal(np.asarray(want_new),
+                                  np.asarray(got_new))
+    np.testing.assert_array_equal(np.asarray(want_vis),
+                                  np.asarray(got_vis))
+
+
+@pytest.mark.parametrize("block_v", (8, 32, 256))
+def test_expand_kernel_block_shapes(block_v):
+    frontier, visited, nbr, gmask = _random_step(70, 4, 2, seed=1)
+    want_new, want_vis = _expand_ref(frontier, visited, nbr, gmask)
+    got_new, got_vis = rrr_expand_step_pallas(
+        frontier, visited, nbr, gmask, block_v=block_v, interpret=True)
+    np.testing.assert_array_equal(np.asarray(want_new),
+                                  np.asarray(got_new))
+    np.testing.assert_array_equal(np.asarray(want_vis),
+                                  np.asarray(got_vis))
+
+
+def test_expand_kernel_zero_mask_is_noop():
+    frontier, visited, nbr, gmask = _random_step(24, 3, 2, seed=2)
+    gmask = jnp.zeros_like(gmask)
+    new, vis = rrr_expand_step_pallas(frontier, visited, nbr, gmask,
+                                      interpret=True)
+    assert int(jnp.sum(new)) == 0
+    np.testing.assert_array_equal(np.asarray(vis), np.asarray(visited))
+
+
+def test_expand_kernel_empty_forward_adjacency():
+    frontier, visited, _, _ = _random_step(16, 1, 2, seed=3)
+    nbr = jnp.zeros((16, 0), dtype=jnp.int32)
+    gmask = jnp.zeros((16, 0, 2), dtype=jnp.uint32)
+    new, vis = rrr_expand_step_pallas(frontier, visited, nbr, gmask,
+                                      interpret=True)
+    assert int(jnp.sum(new)) == 0
+    np.testing.assert_array_equal(np.asarray(vis), np.asarray(visited))
+
+
+def test_kernel_sampler_single_pallas_call_per_step_jaxpr():
+    """Acceptance criterion: sampler="kernel" fuses each BFS expansion
+    step into exactly ONE pallas_call (the while-loop body traces
+    once, so the whole sampler jaxpr carries exactly one); the packed
+    and dense JAX paths carry zero."""
+    from repro.core.rrr import sample_incidence
+    from repro.graphs import generators
+    from repro.graphs.csr import padded_adjacency, padded_forward_adjacency
+
+    g = generators.erdos_renyi(40, 4.0, seed=0)
+    nbr, prob, wt = padded_adjacency(g)
+    fwd = padded_forward_adjacency(g)
+
+    def make(sampler):
+        return jax.make_jaxpr(
+            lambda: sample_incidence(
+                nbr, prob, wt, jax.random.key(0), theta=64, n=40,
+                model="IC", max_steps=8, sampler=sampler,
+                fwd=(None if sampler == "dense" else fwd)))()
+
+    assert str(make("kernel")).count("pallas_call") == 1
+    assert str(make("packed")).count("pallas_call") == 0
+    assert str(make("dense")).count("pallas_call") == 0
