@@ -348,6 +348,96 @@ def bench_sampler(fast: bool):
            f"cpu_mode=interpret-emulation")
 
 
+def bench_cascade(fast: bool):
+    """Cascade evaluator (§4 spread metric): lax.map reference vs the
+    word-packed engine vs the fused per-step Pallas kernel.
+
+    Frontier/active *state* bytes touched per diffusion step, summed
+    over simulations (read frontier + active, write new + active —
+    the same 4-touch model as the sampler bench; S steps total):
+
+      map     S * 4*sims*n      bytes  (bool [n] state per simulation)
+      packed  S * 4*sims*n/8    bytes  (uint32 words, 32 sims/word —
+                                        the activation incidence IS
+                                        the state, no pack epilogue)
+      kernel  packed bytes, 1 Pallas launch per diffusion step (the
+              gathered [n, d, W] frontier intermediate never
+              round-trips HBM)
+
+    The >= 8x state ratio is asserted (model-verified, the acceptance
+    criterion) before the rows are recorded, as is bit-identity of
+    the three engines' packed activation incidence.  CPU wall times
+    below (the kernel engine runs interpret-emulated)."""
+    from repro.core import cascade
+    from repro.graphs import generators
+
+    n, avg_deg, sims, steps = ((256, 6.0, 256, 8) if fast
+                               else (2048, 8.0, 256, 16))
+    g = generators.erdos_renyi(n, avg_deg, seed=5)
+    key = jax.random.key(13)
+    seeds = np.arange(8, dtype=np.int32)
+
+    outs = {}
+    times = {}
+    for engine in cascade.ENGINES:
+        def run(ky, e=engine):
+            return cascade.simulate_cascades(
+                g, seeds, ky, model="IC", num_sims=sims,
+                max_steps=steps, engine=e)
+        outs[engine] = run(key)
+        times[engine] = timeit(run, key)
+    np.testing.assert_array_equal(np.asarray(outs["map"]),
+                                  np.asarray(outs["packed"]))
+    np.testing.assert_array_equal(np.asarray(outs["map"]),
+                                  np.asarray(outs["kernel"]))
+
+    map_state = steps * 4 * sims * n
+    packed_state = steps * 4 * sims * n // 8
+    state_ratio = map_state / packed_state
+    assert state_ratio >= 8.0, state_ratio  # acceptance: model-verified
+    record(f"cascade/engine_map/n={n},sims={sims},S={steps}",
+           times["map"] * 1e6,
+           f"tpu_roofline_target_us={map_state/HBM_BW*1e6:.2f} "
+           f"state_bytes={map_state} parity=packed-exact")
+    record(f"cascade/engine_packed/n={n},sims={sims},S={steps}",
+           times["packed"] * 1e6,
+           f"tpu_roofline_target_us={packed_state/HBM_BW*1e6:.2f} "
+           f"state_bytes={packed_state} "
+           f"state_bytes_ratio={state_ratio:.1f}x parity=map-exact")
+    record(f"cascade/engine_kernel/n={n},sims={sims},S={steps}",
+           times["kernel"] * 1e6,
+           f"tpu_roofline_target_us={packed_state/HBM_BW*1e6:.2f} "
+           f"state_bytes={packed_state} "
+           f"state_bytes_ratio={state_ratio:.1f}x "
+           f"launches_per_step=1 parity=map-exact "
+           f"cpu_mode=interpret-emulation")
+
+
+def bench_spread_gate(fast: bool):
+    """Measured-spread quality gate as a bench row: one full gate pass
+    (sample -> solve every solver x sampler variant -> simulate ->
+    paired z-test vs the scan+dense reference).  A quality regression
+    raises inside run_gate and fails the bench job exactly like a perf
+    regression; the recorded wall time additionally gates the
+    end-to-end evaluation pipeline's speed."""
+    import time as _time
+
+    from benchmarks import spread_gate
+
+    kw = (dict(n=256, avg_deg=6.0, ks=(4, 8), theta=512, num_sims=64)
+          if fast else
+          dict(n=512, avg_deg=6.0, ks=(4, 8, 16), theta=1024,
+               num_sims=128))
+    t0 = _time.perf_counter()
+    ok, rows = spread_gate.run_gate(quiet=True, **kw)
+    dt = _time.perf_counter() - t0
+    assert ok, [r for r in rows if not r["pass"]]
+    record(f"cascade/spread_gate/n={kw['n']},k={max(kw['ks'])}",
+           dt * 1e6,
+           f"rows={len(rows)} z_max={spread_gate.Z_MAX} "
+           f"variants={len(spread_gate.VARIANTS)} quality=PASS")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", default=None, metavar="OUT",
@@ -370,6 +460,8 @@ def main(argv=None):
         bench_receiver(args.fast)
         bench_sender(args.fast)
         bench_sampler(args.fast)
+        bench_cascade(args.fast)
+        bench_spread_gate(args.fast)
     calib = min(calib, calibration_us())
     for name, row in _RESULTS.items():
         emit(name, float(row["us"]), row["derived"])

@@ -1,0 +1,366 @@
+"""Vectorized, bit-packed Monte-Carlo cascade simulation (the §4
+quality yardstick: expected spread of a returned seed set).
+
+This is the *evaluation* half of the stack — the semantic ground truth
+the RRR machinery optimizes for — rebuilt on the same packed-word
+engine the PR 5 sampler uses, instead of the one-cascade-at-a-time
+``lax.map`` + Python-loop adjacency rebuild it replaced (the shape of
+APGL's ``simulateCascades``).  Three engines share bit-identical
+semantics (same PRNG key ⇒ identical per-simulation activation sets),
+mirroring the sampler's ``sampler=`` triad:
+
+  * ``engine="map"``    — the per-simulation reference: ``lax.map``
+    over simulations, bool ``[n]`` frontier/active state per cascade,
+    and the legacy scatter expansion (an active ``u`` fires each
+    out-edge) over :func:`repro.graphs.csr.padded_forward_adjacency`
+    — the ``(v, rev_slot)`` pairs locate each out-edge's coin in the
+    reverse-slot draw, so no private forward-adjacency rebuild (the
+    old ``diffusion._forward_padded`` O(n·d) Python loops) survives.
+  * ``engine="packed"`` — frontier/active live word-packed as uint32
+    ``[n, num_sims/32]`` for the whole cascade (32 simulations per
+    word, 8x fewer state bytes than bool) and one diffusion step is a
+    *gather* over the padded reverse adjacency:
+    ``hit_word[v] |= frontier_word[nbr[v, slot]] & coin_word[v, slot]``
+    over the in-edge slots of ``v``.  This is the exact mirror of the
+    packed RRR sampler: reverse-BFS sampling gathers over the forward
+    table with cross-gathered coins; the forward cascade gathers over
+    the reverse table (:func:`repro.graphs.csr.padded_adjacency`)
+    where the coins are drawn in place — same kernel geometry,
+    mirrored tables.
+  * ``engine="kernel"`` — the packed engine with each diffusion step
+    fused into ONE Pallas launch: the cascade step has exactly the
+    gather + AND + OR-accumulate + new/active-update shape of the
+    sampler's BFS expansion, so it reuses
+    ``repro.kernels.rrr_expand`` (via ``kernels.ops.rrr_expand_step``)
+    unchanged — frontier/active words VMEM-resident, index and packed
+    coin-mask tiles streamed double-buffered.
+
+Coins follow the PR 5 sampler layout — uniforms per simulation lane
+over the reverse-adjacency slots, ``coin_chunk`` slots at a time —
+with two deliberate differences.  They are keyed per lane
+(``fold_in(chunk_key, sim)``) rather than as one joint
+``[num_sims, n, chunk]`` draw, so the per-simulation map engine can
+reproduce the exact same stream one lane at a time; that is what
+makes "same key ⇒ identical mean spread" a *bit* equality the parity
+tests can pin, not a statistical statement.  And each edge's coin is
+drawn ONCE per simulation (the triggering-set / live-edge
+formulation) instead of fresh per BFS step: IC/WC dynamics examine an
+edge at most once — the step after its source activates — so this is
+distributionally identical, and it makes shared-coin runs exactly
+monotone in the edge probabilities (the WC coupling property).  The
+cascade is then literally forward reachability over live edges — the
+exact dual of the sampler's reverse reachability.
+
+Diffusion models:
+
+  * ``"IC"`` — independent cascade: edge ``u → v`` fires with its
+    stored probability ``g.probs`` the step after ``u`` activates.
+  * ``"WC"`` — weighted cascade: IC dynamics with the activation
+    probability of ``u → v`` equal to its *normalized LT weight*
+    (``g.weights``; incoming sums ≤ 1).  Uniform raw weights recover
+    the classic ``1/d_in(v)`` weighted-cascade model.  Because all
+    engines share coins, scaling a weight up can only grow the
+    activation set — spread is monotone in edge weight, coupled
+    per-simulation (pinned by the sanity tests).
+  * ``"LT"`` — linear threshold via the live-edge equivalence of
+    Kempe et al.: each vertex selects at most one in-edge (edge slot
+    ``j`` with probability ``g.weights[v, j]``), drawn once per
+    simulation, and activates the step after its selected in-neighbor
+    does.  Distributionally identical to the threshold form (vertex
+    thresholds ``tau ~ U(0,1)``, activate when active in-weight mass
+    ≥ ``tau``), which is kept in ``repro.core.diffusion`` as
+    ``lt_threshold_influence`` for cross-checking; the live-edge form
+    is the one that shares the bitwise gather engine (and the Pallas
+    kernel) with IC/WC.
+
+Seed sets are sanitized before the initial scatter: ``-1`` pads (the
+convention of every selector in this repo) and out-of-range ids are
+dropped, so ``spread(g, padded_seeds) == spread(g, real_seeds)``
+exactly — the seed-pad inflation bug this module replaced
+(``jnp.zeros(n).at[seeds].set(True)`` clamps ``-1`` onto vertex
+``n-1``, silently adding a phantom seed per pad slot).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import bitset
+from repro.core.rrr import _coin_chunks, _pack_batch_lane
+from repro.graphs.csr import (CSRGraph, padded_adjacency,
+                              padded_forward_adjacency)
+
+Model = Literal["IC", "LT", "WC"]
+
+MODELS = ("IC", "LT", "WC")
+ENGINES = ("map", "packed", "kernel")
+
+
+def resolve_engine(engine: Optional[str], default: str = "packed") -> str:
+    """Validate the cascade engine triad (mirrors
+    ``rrr.resolve_sampler`` / ``maxcover.resolve_solver``)."""
+    if engine is None:
+        engine = default
+    if engine not in ENGINES:
+        raise ValueError(
+            f"unknown cascade engine {engine!r}; expected one of {ENGINES}")
+    return engine
+
+
+def resolve_model(model: Optional[str], default: str = "IC") -> str:
+    if model is None:
+        model = default
+    if model not in MODELS:
+        raise ValueError(
+            f"unknown diffusion model {model!r}; expected one of {MODELS}")
+    return model
+
+
+def seeds_to_mask(n: int, seeds) -> jnp.ndarray:
+    """bool [n] seed mask with ``-1`` pads and out-of-range ids dropped.
+
+    The headline bugfix: a plain ``.at[seeds].set(True)`` clamps
+    negative ids onto vertex ``n - 1``, so every pad slot of a
+    -1-padded selector output used to act as a phantom seed and
+    inflate the reported spread.
+    """
+    seeds = jnp.asarray(seeds, dtype=jnp.int32).reshape(-1)
+    ok = (seeds >= 0) & (seeds < n)
+    safe = jnp.clip(seeds, 0, max(n - 1, 0))
+    return jnp.zeros((n,), dtype=bool).at[safe].max(ok)
+
+
+def _lane_words(num_sims: int) -> jnp.ndarray:
+    """uint32 [W] with bit j of word w set iff lane w*32+j < num_sims
+    — the valid-simulation mask seeding every packed seed row (pad
+    lanes start dead and stay dead, so popcounts never see them)."""
+    return bitset.pack_bool_matrix(jnp.ones((1, num_sims), dtype=bool))[0]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "model", "num_sims", "max_steps", "engine", "coin_chunk"))
+def _simulate(nbr, prob, wt, fwd_nbr, fwd_rslot, smask, key, *,
+              model: str, num_sims: int, max_steps: int, engine: str,
+              coin_chunk: int):
+    """Core simulator over padded tables.
+
+    nbr/prob/wt: padded reverse adjacency [n, d] (row v = in-edges).
+    fwd_nbr/fwd_rslot: padded forward adjacency [n, df] (map engine).
+    smask: bool [n] sanitized seed mask.
+    Returns the packed activation incidence uint32 [n, ceil(sims/32)]:
+    bit s of word s//32 at row v is set iff simulation s activated v.
+    """
+    n, d = nbr.shape
+    lane = _lane_words(num_sims)
+    active0 = jnp.where(smask[:, None], lane[None, :],
+                        jnp.zeros((), bitset.WORD_DTYPE))
+    if d == 0:          # edgeless graph: nothing ever fires
+        return active0
+    valid = nbr >= 0
+    chunk, n_chunks, d_pad = _coin_chunks(d, coin_chunk)
+    sims = jnp.arange(num_sims)
+    cumw = jnp.cumsum(wt, axis=1)
+    in_deg = jnp.sum(valid, axis=1)
+
+    if model in ("IC", "WC"):
+        # WC = IC dynamics with p(u -> v) = the normalized LT weight
+        # (zero at pads by construction, like prob).
+        p_eff = prob if model == "IC" else jnp.where(valid, wt, 0.0)
+        prob_p = (jnp.pad(p_eff, ((0, 0), (0, d_pad - d)))
+                  if d_pad != d else p_eff)
+
+    if engine == "map":
+        return _simulate_map(nbr, fwd_nbr, fwd_rslot, smask, key,
+                             model=model, num_sims=num_sims,
+                             max_steps=max_steps, chunk=chunk,
+                             n_chunks=n_chunks, d_pad=d_pad,
+                             prob_p=(prob_p if model != "LT" else None),
+                             cumw=cumw, in_deg=in_deg)
+
+    # ---- packed / kernel engines: uint32 [n, W] word state ----------
+    w = lane.shape[0]
+    tbl = jnp.pad(jnp.where(valid, nbr, 0), ((0, 0), (0, d_pad - d)))
+
+    def expand(frontier, active, mask):
+        """One diffusion step: gather over the reverse table.  The
+        ``kernel`` engine fuses it into one pallas_call per step via
+        the sampler's expansion kernel (identical word algebra)."""
+        if engine == "kernel":
+            from repro.kernels import ops as kops
+            return kops.rrr_expand_step(frontier, active, tbl, mask)
+        hit = bitset.or_reduce(frontier[tbl] & mask, axis=1)
+        new = hit & ~active
+        return new, active | new
+
+    # Live-edge mask, drawn ONCE per simulation (the triggering-set
+    # formulation): IC/WC examine each edge at most once — the step
+    # after its source activates — so fixing the coin up front is
+    # distributionally identical to fresh per-step coins, and it makes
+    # shared-coin runs *exactly* monotone in the edge probabilities
+    # (the WC coupling test relies on this).  LT's selection is a
+    # one-hot live edge per (simulation, vertex) by construction.
+    if model in ("IC", "WC"):
+        def one(c, m):
+            # Per-lane coins over the reverse slots, chunked exactly
+            # like the PR 5 sampler; each chunk packs over the
+            # simulation lane immediately so the bool intermediate
+            # never exceeds [num_sims, n, chunk].
+            kc = jax.random.fold_in(key, c)
+            coins = jax.vmap(lambda s: jax.random.uniform(
+                jax.random.fold_in(kc, s), (n, chunk)))(sims)
+            p_c = lax.dynamic_slice(prob_p, (0, c * chunk), (n, chunk))
+            pk = _pack_batch_lane(coins < p_c[None], n, chunk, num_sims)
+            return lax.dynamic_update_slice(m, pk, (0, c * chunk, 0))
+    else:   # LT live-edge: one-hot in-edge selection per simulation.
+        r = jax.vmap(lambda s: jax.random.uniform(
+            jax.random.fold_in(key, s), (n,)))(sims)       # [sims, n]
+        chosen = jnp.sum(r[:, :, None] >= cumw[None], axis=-1)
+
+        def one(c, m):
+            slots = c * chunk + jnp.arange(chunk)
+            sel = ((chosen[:, :, None] == slots[None, None]) &
+                   (slots[None, None] < in_deg[None, :, None]))
+            pk = _pack_batch_lane(sel, n, chunk, num_sims)
+            return lax.dynamic_update_slice(m, pk, (0, c * chunk, 0))
+
+    live_mask = lax.fori_loop(
+        0, n_chunks, one,
+        jnp.zeros((n, d_pad, w), dtype=bitset.WORD_DTYPE))
+
+    def body(state):
+        frontier, active, step = state
+        new, active = expand(frontier, active, live_mask)
+        return new, active, step + 1
+
+    def cond(state):
+        frontier, _, step = state
+        return jnp.any(frontier) & (step < max_steps)
+
+    _, active, _ = jax.lax.while_loop(
+        cond, body, (active0, active0, 0))
+    return active
+
+
+def _simulate_map(nbr, fwd_nbr, fwd_rslot, smask, key, *, model: str,
+                  num_sims: int, max_steps: int, chunk: int,
+                  n_chunks: int, d_pad: int, prob_p, cumw, in_deg):
+    """Per-simulation reference engine (lax.map, bool [n] state).
+
+    IC/WC keep the legacy scatter geometry — an active ``u`` fires its
+    out-edges — over :func:`padded_forward_adjacency`, with each
+    forward slot's coin gathered from the shared reverse-slot draw via
+    its ``(v, rev_slot)`` pair (the mirror of the packed sampler's
+    gmask gather).  Scatter-over-forward and gather-over-reverse touch
+    every real edge exactly once with the same coin, so the engines
+    are bit-identical.
+    """
+    n, d = nbr.shape
+    fwd_valid = fwd_nbr >= 0
+    safe_v = jnp.where(fwd_valid, fwd_nbr, 0)
+    safe_slot = jnp.clip(fwd_rslot, 0)
+    tgt = jnp.where(fwd_valid, fwd_nbr, n)
+
+    def one_sim(s):
+        if model in ("IC", "WC"):
+            # This simulation's live-edge coins in reverse-slot
+            # layout, drawn once (the same stream the packed engine
+            # vmaps over lanes).
+            def one(c, f):
+                kc = jax.random.fold_in(key, c)
+                coins = jax.random.uniform(
+                    jax.random.fold_in(kc, s), (n, chunk))
+                p_c = lax.dynamic_slice(prob_p, (0, c * chunk),
+                                        (n, chunk))
+                return lax.dynamic_update_slice(
+                    f, coins < p_c, (0, c * chunk))
+
+            fr = lax.fori_loop(0, n_chunks, one,
+                               jnp.zeros((n, d_pad), dtype=bool))
+            fire_fwd = fr[safe_v, safe_slot] & fwd_valid
+
+            def body(state):
+                frontier, active, step = state
+                launch = frontier[:, None] & fire_fwd
+                hit = jnp.zeros(n + 1, dtype=bool).at[
+                    tgt.reshape(-1)].max(launch.reshape(-1))[:n]
+                new = hit & ~active
+                return new, active | new, step + 1
+        else:   # LT live-edge chain: follow the one selected in-edge
+            r = jax.random.uniform(jax.random.fold_in(key, s), (n,))
+            chosen = jnp.sum(r[:, None] >= cumw, axis=1)
+            has = chosen < in_deg
+            pick = nbr[jnp.arange(n), jnp.clip(chosen, 0, d - 1)]
+            psafe = jnp.clip(pick, 0)
+
+            def body(state):
+                frontier, active, step = state
+                new = frontier[psafe] & has & ~active
+                return new, active | new, step + 1
+
+        def cond(state):
+            frontier, _, step = state
+            return jnp.any(frontier) & (step < max_steps)
+
+        _, active, _ = jax.lax.while_loop(
+            cond, body, (smask, smask, 0))
+        return active
+
+    visited = lax.map(one_sim, jnp.arange(num_sims))     # [sims, n]
+    return bitset.pack_bool_matrix(visited.T)
+
+
+def simulate_cascades(g: CSRGraph, seeds, key, *, model: Model = "IC",
+                      num_sims: int = 64, max_steps: int = 64,
+                      engine: str = "packed",
+                      coin_chunk: int = 32) -> jnp.ndarray:
+    """Simulate ``num_sims`` cascades from ``seeds``; return the packed
+    activation incidence uint32 [n, ceil(num_sims/32)] (bit s of word
+    s//32 at row v ⇔ simulation s activated vertex v).
+
+    ``seeds`` may carry ``-1`` pads / out-of-range ids — they are
+    dropped (see :func:`seeds_to_mask`).  All engines are bit-identical
+    for the same key/coin_chunk.
+    """
+    engine = resolve_engine(engine)
+    model = resolve_model(model)
+    n = g.num_vertices
+    nbr, prob, wt = padded_adjacency(g)
+    fwd_nbr, fwd_rslot = padded_forward_adjacency(g)
+    smask = seeds_to_mask(n, seeds)
+    return _simulate(nbr, prob, wt, fwd_nbr, fwd_rslot, smask, key,
+                     model=model, num_sims=int(num_sims),
+                     max_steps=int(max_steps), engine=engine,
+                     coin_chunk=int(coin_chunk))
+
+
+def cascade_counts(g: CSRGraph, seeds, key, *, model: Model = "IC",
+                   num_sims: int = 64, max_steps: int = 64,
+                   engine: str = "packed",
+                   coin_chunk: int = 32) -> jnp.ndarray:
+    """Per-simulation activation counts int32 [num_sims] — the paired
+    statistic the spread gate's z-test runs on."""
+    words = simulate_cascades(g, seeds, key, model=model,
+                              num_sims=num_sims, max_steps=max_steps,
+                              engine=engine, coin_chunk=coin_chunk)
+    return jnp.sum(bitset.unpack_words(words, int(num_sims)),
+                   axis=0).astype(jnp.int32)
+
+
+def spread(g: CSRGraph, seeds, key, *, model: Model = "IC",
+           num_sims: int = 64, max_steps: int = 64,
+           engine: str = "packed", coin_chunk: int = 32) -> jnp.ndarray:
+    """Monte-Carlo estimate of sigma(seeds): mean activation count.
+
+    Computed straight off the packed words (sum of popcounts / sims) —
+    the [n, num_sims] bool matrix never materializes on the packed
+    engines.
+    """
+    words = simulate_cascades(g, seeds, key, model=model,
+                              num_sims=num_sims, max_steps=max_steps,
+                              engine=engine, coin_chunk=coin_chunk)
+    total = jnp.sum(bitset.coverage_size(words))
+    return total.astype(jnp.float32) / float(num_sims)

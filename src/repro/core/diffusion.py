@@ -1,111 +1,100 @@
-"""Diffusion models (IC / LT) and Monte-Carlo influence estimation.
+"""Monte-Carlo influence estimation — thin compatibility wrapper.
 
-Used for (a) the quality metric of the paper's §4 (average activations
-over simulations of the diffusion process from a seed set) and (b) as
-the semantic ground truth the RRR sampler must agree with (property
-tests check E[sigma({v})] ~ theta-frequency of v in RRR sets).
+The simulator itself lives in :mod:`repro.core.cascade` (word-packed
+frontier state, gather expansion over the padded adjacency tables,
+optional fused Pallas step — see that module).  This wrapper keeps the
+historical ``influence(g, seeds, key, ...)`` entry point every caller
+and test uses, now with two behavioural fixes:
+
+  * seed arrays may carry ``-1`` pads (IMM/RandGreedi/streaming all
+    pad to k) — pads are dropped instead of being clamped onto vertex
+    ``n - 1`` and inflating the reported spread;
+  * ``model="LT"`` runs the live-edge form of linear threshold (Kempe
+    et al.'s equivalence), which shares the bitwise engine with IC.
+    The legacy threshold-semantics simulator survives as
+    :func:`lt_threshold_influence` — same PRNG stream as before, with
+    the activation-mass matrix now computed once per step instead of
+    once in ``cond`` and again in ``body``.
+
+The old private ``_forward_padded`` (O(n·d) host loops duplicating
+``graphs/csr.padded_forward_adjacency``) is gone; the cascade engines
+use the shared padded tables.
 """
 from __future__ import annotations
 
 import functools
-from typing import Literal
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import cascade
+from repro.core.cascade import Model  # noqa: F401  (compat re-export)
 from repro.graphs.csr import CSRGraph, padded_adjacency
 
-Model = Literal["IC", "LT"]
 
+def influence(g: CSRGraph, seeds, key, model: str = "IC",
+              num_sims: int = 64, max_steps: int = 64,
+              engine: str = "packed",
+              coin_chunk: int = 32) -> jnp.ndarray:
+    """Monte-Carlo estimate of sigma(seeds) under the diffusion model.
 
-def _forward_padded(g: CSRGraph):
-    """Forward (out-edge) padded adjacency for simulating spread.
-
-    The CSR container stores reverse edges (in-neighbors); simulation
-    walks forward, so we transpose once on host.
+    ``seeds`` may be -1-padded; pads are ignored.  ``engine`` selects
+    the cascade backend (``map`` / ``packed`` / ``kernel`` — all
+    bit-identical for the same key; see :mod:`repro.core.cascade`).
     """
-    import numpy as np
-    n = g.num_vertices
-    indptr = np.asarray(g.indptr)
-    idx = np.asarray(g.indices)
-    p = np.asarray(g.probs)
-    w = np.asarray(g.weights)
-    out_lists = [[] for _ in range(n)]
-    for v in range(n):
-        for e in range(indptr[v], indptr[v + 1]):
-            out_lists[idx[e]].append((v, p[e], w[e]))
-    d = max((len(l) for l in out_lists), default=0)
-    nbr = np.full((n, max(d, 1)), -1, dtype=np.int32)
-    prob = np.zeros((n, max(d, 1)), dtype=np.float32)
-    wt = np.zeros((n, max(d, 1)), dtype=np.float32)
-    for u, lst in enumerate(out_lists):
-        for j, (v, pj, wj) in enumerate(lst):
-            nbr[u, j], prob[u, j], wt[u, j] = v, pj, wj
-    return jnp.asarray(nbr), jnp.asarray(prob), jnp.asarray(wt)
+    return cascade.spread(g, seeds, key, model=model, num_sims=num_sims,
+                          max_steps=max_steps, engine=engine,
+                          coin_chunk=coin_chunk)
 
 
-@functools.partial(jax.jit, static_argnames=("model", "num_sims", "max_steps"))
-def _simulate(nbr, prob, wt, rev_nbr, rev_wt, seeds_mask, key, *,
-              model: str, num_sims: int, max_steps: int):
-    n = nbr.shape[0]
+@functools.partial(jax.jit, static_argnames=("num_sims", "max_steps"))
+def _lt_threshold(rev_nbr, rev_wt, seeds_mask, key, *, num_sims: int,
+                  max_steps: int):
+    n = rev_nbr.shape[0]
 
     def one_sim(k):
-        if model == "IC":
-            def body(state):
-                frontier, active, kk, step = state
-                kk, sub = jax.random.split(kk)
-                coins = jax.random.uniform(sub, (n, nbr.shape[1]))
-                # u in frontier tries to activate out-neighbor v once.
-                fire = frontier[:, None] & (coins < prob) & (nbr >= 0)
-                tgt = jnp.where(nbr >= 0, nbr, n)
-                hit = jnp.zeros(n + 1, dtype=bool).at[tgt.reshape(-1)].max(
-                    fire.reshape(-1))[:n]
-                new = hit & ~active
-                return new, active | new, kk, step + 1
+        # Vertex thresholds tau ~ U(0,1); activate when the active
+        # in-neighbor weight mass reaches tau.
+        tau = jax.random.uniform(k, (n,))
 
-            def cond(state):
-                frontier, _, _, step = state
-                return jnp.any(frontier) & (step < max_steps)
+        def mass_of(active):
+            act_src = jnp.where(rev_nbr >= 0,
+                                active[jnp.clip(rev_nbr, 0)], False)
+            return jnp.sum(jnp.where(act_src, rev_wt, 0.0), axis=1)
 
-            frontier0 = seeds_mask
-            _, active, _, _ = jax.lax.while_loop(
-                cond, body, (frontier0, seeds_mask, k, 0))
-            return jnp.sum(active)
-        else:  # LT: vertex thresholds tau ~ U(0,1); activate when
-            # sum of active in-neighbor weights >= tau.
-            tau = jax.random.uniform(k, (n,))
+        # ``grew`` is carried so the mass matrix is computed exactly
+        # once per step (it used to be recomputed in ``cond``).  The
+        # final active set is unchanged: once growth stops, the extra
+        # body iteration is a no-op union.
+        def body(state):
+            active, _grew, step = state
+            hit = mass_of(active) >= tau
+            return active | hit, jnp.any(hit & ~active), step + 1
 
-            def body(state):
-                active, step = state
-                act_src = jnp.where(rev_nbr >= 0, active[
-                    jnp.clip(rev_nbr, 0)], False)
-                mass = jnp.sum(jnp.where(act_src, rev_wt, 0.0), axis=1)
-                new_active = active | (mass >= tau)
-                return new_active, step + 1
+        def cond(state):
+            _active, grew, step = state
+            return grew & (step < max_steps)
 
-            def cond(state):
-                active, step = state
-                act_src = jnp.where(rev_nbr >= 0, active[
-                    jnp.clip(rev_nbr, 0)], False)
-                mass = jnp.sum(jnp.where(act_src, rev_wt, 0.0), axis=1)
-                grew = jnp.any((mass >= tau) & ~active)
-                return grew & (step < max_steps)
-
-            active, _ = jax.lax.while_loop(cond, body, (seeds_mask, 0))
-            return jnp.sum(active)
+        active, _, _ = jax.lax.while_loop(
+            cond, body, (seeds_mask, True, 0))
+        return jnp.sum(active)
 
     keys = jax.random.split(key, num_sims)
     counts = jax.lax.map(one_sim, keys)
     return jnp.mean(counts.astype(jnp.float32))
 
 
-def influence(g: CSRGraph, seeds, key, model: Model = "IC",
-              num_sims: int = 64, max_steps: int = 64) -> jnp.ndarray:
-    """Monte-Carlo estimate of sigma(seeds) under the diffusion model."""
-    n = g.num_vertices
-    nbr, prob, _wt = _forward_padded(g)
+def lt_threshold_influence(g: CSRGraph, seeds, key, num_sims: int = 64,
+                           max_steps: int = 64) -> jnp.ndarray:
+    """Legacy threshold-semantics LT Monte Carlo.
+
+    Distributionally identical to ``influence(..., model="LT")`` (the
+    live-edge form) but on a different coin stream; kept as the
+    cross-check oracle for the equivalence tests.  Bit-identical to
+    the pre-rewrite ``influence(g, seeds, key, model="LT")`` for
+    pad-free seed sets.
+    """
     rev_nbr, _rev_prob, rev_wt = padded_adjacency(g)
-    seeds = jnp.asarray(seeds)
-    seeds_mask = jnp.zeros(n, dtype=bool).at[seeds].set(True)
-    return _simulate(nbr, prob, _wt, rev_nbr, rev_wt, seeds_mask, key,
-                     model=model, num_sims=num_sims, max_steps=max_steps)
+    seeds_mask = cascade.seeds_to_mask(g.num_vertices, seeds)
+    return _lt_threshold(rev_nbr, rev_wt, seeds_mask, key,
+                         num_sims=int(num_sims), max_steps=int(max_steps))

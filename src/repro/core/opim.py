@@ -50,7 +50,8 @@ def _sigma_upper(cov_ub: float, theta: int, n: int, delta: float) -> float:
 
 
 def opim(g: CSRGraph, k: int, eps: float, key, *, model: str = "IC",
-         selector: Optional[Selector] = None, solver_alpha: float = None,
+         selector: Optional[Selector] = None,
+         solver_alpha: Optional[float] = None,
          theta0: int = 256, max_theta: int = 1 << 16, max_steps: int = 32,
          fail_prob: float = 1.0 / 128.0,
          solver: str = "scan", sampler: str = "dense",

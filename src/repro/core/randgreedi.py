@@ -28,6 +28,9 @@ class RandGreediResult(NamedTuple):
     global_coverage: jnp.ndarray
     best_local_coverage: jnp.ndarray
     local_seeds: jnp.ndarray  # int32 [m, k] global ids of local picks
+    covered: jnp.ndarray      # uint32 [W] union of rows covered by
+    #   ``seeds`` (the winning branch's cover) — popcount == coverage;
+    #   the spread harness uses it to cross-check solution quality.
 
 
 def partition_permutation(n: int, key) -> jnp.ndarray:
@@ -114,8 +117,9 @@ def _randgreedi_maxcover(rows: jnp.ndarray, key, *, m: int, k: int,
     take_global = g_cov >= local_cov[best_m]
     seeds = jnp.where(take_global, g_ids, local_ids[best_m])
     coverage = jnp.maximum(g_cov, local_cov[best_m])
+    covered = jnp.where(take_global, g_rows_cover, local.covered[best_m])
     return RandGreediResult(seeds, coverage, g_cov, jnp.max(local_cov),
-                            local_ids)
+                            local_ids, covered)
 
 
 @functools.partial(jax.jit, static_argnames=("m", "k", "use_kernel"))

@@ -148,6 +148,14 @@ def padded_adjacency(g: CSRGraph, pad_to: Optional[int] = None):
 
     Fixed-shape form used by the batched BFS sampler: row v lists the
     in-neighbors of v, padded with -1 (prob/weight 0).
+
+    Direction duality: this reverse table is also the natural *gather*
+    table for forward cascade simulation (``core/cascade``) — one
+    diffusion step reads ``frontier[nbr[v, slot]]`` over v's in-edge
+    slots, with the edge coins drawn in place at ``(v, slot)`` — the
+    exact mirror of RRR reverse-BFS, which gathers over
+    :func:`padded_forward_adjacency` and locates coins through its
+    ``rev_slot`` pairs.
     """
     n = g.num_vertices
     indptr = np.asarray(g.indptr)

@@ -60,10 +60,17 @@ def greedy_maxcover_lazy(rows: jnp.ndarray, k: int):
 
 def rrr_expand_step(frontier: jnp.ndarray, visited: jnp.ndarray,
                     fwd_nbr: jnp.ndarray, gmask: jnp.ndarray):
-    """Fused packed RRR BFS expansion step (the ``sampler="kernel"``
-    engine): frontier/visited words VMEM-resident, forward-index and
-    packed coin-mask tiles streamed double-buffered, gather + AND +
-    OR-accumulate + new/visited updates in ONE pallas_call per step."""
+    """Fused packed BFS expansion step: frontier/visited words
+    VMEM-resident, index and packed coin-mask tiles streamed
+    double-buffered, gather + AND + OR-accumulate + new/visited
+    updates in ONE pallas_call per step.
+
+    The kernel is direction-agnostic — it just gathers frontier words
+    through an index table under a packed mask — so it serves both the
+    RRR sampler's reverse BFS (``sampler="kernel"``: table =
+    forward adjacency, coins cross-gathered via rev_slot) and the
+    cascade simulator's forward diffusion (``engine="kernel"`` in
+    ``core/cascade``: table = reverse adjacency, coins local)."""
     return rrr_expand_step_pallas(frontier, visited, fwd_nbr, gmask,
                                   interpret=_interpret())
 

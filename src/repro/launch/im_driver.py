@@ -93,6 +93,20 @@ def main(argv=None):
                          "or 0 = default ('auto' with --use-kernel, "
                          "whole stream otherwise)")
     ap.add_argument("--eval-sims", type=int, default=32)
+    ap.add_argument("--eval-engine", default="packed",
+                    choices=("map", "packed", "kernel"),
+                    help="cascade engine for the final spread "
+                         "evaluation: 'map' (per-simulation lax.map "
+                         "reference), 'packed' (word-packed uint32 "
+                         "[n, sims/32] state — 8x fewer state bytes), "
+                         "or 'kernel' (packed plus ONE fused Pallas "
+                         "launch per diffusion step); all three "
+                         "bit-identical for the same seed")
+    ap.add_argument("--eval-spread", action="store_true",
+                    help="after selection, evaluate the returned seed "
+                         "set on ALL cascade engines and assert the "
+                         "measured spreads are identical (the "
+                         "spread-gate cross-check, inline)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     chunk_size = (args.chunk_size if args.chunk_size == "auto"
@@ -165,13 +179,27 @@ def main(argv=None):
                   f"coverage_frac={res.coverage_fraction:.4f}")
     elapsed = time.time() - t0
 
-    seeds = np.asarray([s for s in np.asarray(seeds) if s >= 0])
-    spread = float(influence(g, seeds, jax.random.fold_in(key, 99),
-                             model=args.model, num_sims=args.eval_sims))
+    # influence() drops -1 pads itself; keep the compact array only
+    # for the reported k.
+    seeds = np.asarray(seeds)
+    k_real = int((seeds >= 0).sum())
+    eval_key = jax.random.fold_in(key, 99)
+    spread = float(influence(g, seeds, eval_key, model=args.model,
+                             num_sims=args.eval_sims,
+                             engine=args.eval_engine))
+    if args.eval_spread:
+        per_engine = {
+            eng: float(influence(g, seeds, eval_key, model=args.model,
+                                 num_sims=args.eval_sims, engine=eng))
+            for eng in ("map", "packed", "kernel")}
+        assert len(set(per_engine.values())) == 1, per_engine
+        print("[im] spread cross-check: " + "  ".join(
+            f"{e}={v:.2f}" for e, v in per_engine.items()) +
+            "  (bit-identical)")
     ratio = theory.greediris_ratio(args.delta, args.eps,
                                    args.alpha if "trunc" in args.selector
                                    else 1.0)
-    print(f"[im] k={len(seeds)} expected influence = {spread:.1f} "
+    print(f"[im] k={k_real} expected influence = {spread:.1f} "
           f"({100 * spread / n:.2f}% of graph) in {elapsed:.2f}s; "
           f"worst-case ratio {ratio:.3f}")
     return 0

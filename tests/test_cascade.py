@@ -1,0 +1,268 @@
+"""Cascade simulator (core/cascade) + influence-wrapper tests:
+engine-triad bit parity, the -1 seed-pad regression, weighted-cascade
+semantics, the threshold-LT restructure, and the Pallas launch pin."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cascade
+from repro.core.diffusion import influence, lt_threshold_influence
+from repro.graphs import generators
+from repro.graphs.csr import CSRGraph, from_edge_list, padded_adjacency
+
+
+def _graphs():
+    # non-word-aligned n, skewed degrees, heavy tail — the same mix
+    # the sampler parity tests sweep.
+    return [generators.erdos_renyi(37, 4.0, seed=0),
+            generators.star(33),
+            generators.preferential_attachment(50, 3, seed=4)]
+
+
+def _chain_graph(n):
+    return from_edge_list(np.arange(n - 1), np.arange(1, n), n,
+                          probs=np.ones(n - 1, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------
+# Engine-triad bit parity (tentpole)
+# ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", ("IC", "LT", "WC"))
+@pytest.mark.parametrize("num_sims,max_steps", ((64, 32), (39, 2)))
+def test_engines_bit_identical(model, num_sims, max_steps):
+    """map / packed / kernel produce the same packed activation
+    incidence for the same key (non-word-aligned sims keep pad lanes
+    dead), hence identical mean spread — a bit equality, not a
+    statistical one."""
+    for g in _graphs():
+        seeds = np.array([0, 2, 5])
+        key = jax.random.key(11)
+        outs = {
+            eng: np.asarray(cascade.simulate_cascades(
+                g, seeds, key, model=model, num_sims=num_sims,
+                max_steps=max_steps, engine=eng))
+            for eng in cascade.ENGINES}
+        np.testing.assert_array_equal(outs["map"], outs["packed"])
+        np.testing.assert_array_equal(outs["packed"], outs["kernel"])
+
+
+def test_spread_counts_consistent():
+    g = generators.erdos_renyi(40, 4.0, seed=1)
+    key = jax.random.key(3)
+    seeds = np.array([1, 4])
+    counts = np.asarray(cascade.cascade_counts(g, seeds, key,
+                                               num_sims=33))
+    sp = float(cascade.spread(g, seeds, key, num_sims=33))
+    assert counts.shape == (33,)
+    assert abs(counts.mean() - sp) < 1e-5
+    assert counts.min() >= 2          # seeds always activate
+
+
+def test_coin_chunk_threads_and_keeps_parity():
+    """coin_chunk is part of the IC PRNG stream (acts like a seed):
+    the engines stay bit-identical at any fixed value, and changing it
+    changes the sampled cascades."""
+    g = generators.preferential_attachment(40, 4, seed=6)
+    key = jax.random.key(8)
+    outs = {}
+    for cc in (2, 32):
+        per = {eng: np.asarray(cascade.simulate_cascades(
+                   g, np.array([0]), key, model="IC", num_sims=64,
+                   engine=eng, coin_chunk=cc))
+               for eng in cascade.ENGINES}
+        np.testing.assert_array_equal(per["map"], per["packed"])
+        np.testing.assert_array_equal(per["packed"], per["kernel"])
+        outs[cc] = per["packed"]
+    assert not np.array_equal(outs[2], outs[32])
+
+
+def test_edgeless_graph_spread_is_seed_count():
+    g = from_edge_list(np.array([], dtype=np.int64),
+                       np.array([], dtype=np.int64), 5)
+    for eng in cascade.ENGINES:
+        sp = float(cascade.spread(g, np.array([0, 3]), jax.random.key(0),
+                                  num_sims=16, engine=eng))
+        assert sp == 2.0
+
+
+def test_bad_engine_and_model_raise():
+    with pytest.raises(ValueError):
+        cascade.resolve_engine("vectorized")
+    with pytest.raises(ValueError):
+        cascade.resolve_model("SIR")
+
+
+# ---------------------------------------------------------------------
+# Seed-pad regression (headline bugfix)
+# ---------------------------------------------------------------------
+
+def test_influence_ignores_minus_one_pads():
+    """influence(g, padded) == influence(g, padded[padded >= 0]) — the
+    -1 pad slots used to clamp onto vertex n-1 and inflate spread."""
+    g = generators.erdos_renyi(50, 5.0, seed=2)
+    key = jax.random.key(0)
+    clean = np.array([3, 7, 11])
+    padded = np.array([3, 7, 11, -1, -1, -1])
+    for eng in cascade.ENGINES:
+        a = float(influence(g, padded, key, num_sims=32, engine=eng))
+        b = float(influence(g, clean, key, num_sims=32, engine=eng))
+        assert a == b
+
+
+def test_influence_all_pads_is_zero_seed_spread():
+    g = generators.erdos_renyi(30, 4.0, seed=3)
+    key = jax.random.key(1)
+    empty = float(influence(g, np.array([], dtype=np.int32), key,
+                            num_sims=16))
+    assert float(influence(g, np.array([-1]), key, num_sims=16)) == empty
+    assert empty == 0.0
+
+
+def test_seeds_to_mask_filters_out_of_range():
+    mask = np.asarray(cascade.seeds_to_mask(
+        5, np.array([-1, 0, 4, 5, 99, 2])))
+    np.testing.assert_array_equal(mask, [True, False, True, False, True])
+
+
+# ---------------------------------------------------------------------
+# Weighted cascade (new model)
+# ---------------------------------------------------------------------
+
+def test_wc_spread_monotone_in_edge_weight():
+    """Shared coins couple the runs: scaling every normalized weight
+    down can only shrink each simulation's activation set."""
+    g = generators.erdos_renyi(60, 5.0, seed=4)
+    g_half = CSRGraph(g.indptr, g.indices, g.probs, g.weights * 0.5)
+    key = jax.random.key(5)
+    seeds = np.array([0, 1])
+    full = np.asarray(cascade.simulate_cascades(
+        g, seeds, key, model="WC", num_sims=64))
+    half = np.asarray(cascade.simulate_cascades(
+        g_half, seeds, key, model="WC", num_sims=64))
+    # per-simulation subset relation on the packed words
+    np.testing.assert_array_equal(half & full, half)
+    lo = float(cascade.spread(g_half, seeds, key, model="WC",
+                              num_sims=64))
+    hi = float(cascade.spread(g, seeds, key, model="WC", num_sims=64))
+    assert lo <= hi
+
+
+def test_wc_weight_one_chain_is_deterministic():
+    """Every vertex's single in-edge normalizes to weight 1.0 ⇒ WC
+    fires it surely: the whole chain activates from vertex 0."""
+    n = 10
+    g = _chain_graph(n)
+    for eng in cascade.ENGINES:
+        sp = float(cascade.spread(g, np.array([0]), jax.random.key(2),
+                                  model="WC", num_sims=8, engine=eng))
+        assert sp == float(n)
+
+
+# ---------------------------------------------------------------------
+# LT: live-edge cascade + threshold-form restructure (satellite)
+# ---------------------------------------------------------------------
+
+def test_lt_chain_deterministic():
+    """Single weight-1 in-edge per vertex ⇒ the live-edge selection is
+    forced: seeding vertex 0 activates the whole chain, seeding the
+    tail activates only the tail."""
+    n = 9
+    g = _chain_graph(n)
+    key = jax.random.key(6)
+    for eng in cascade.ENGINES:
+        assert float(cascade.spread(g, np.array([0]), key, model="LT",
+                                    num_sims=8, engine=eng)) == float(n)
+        assert float(cascade.spread(g, np.array([n - 1]), key,
+                                    model="LT", num_sims=8,
+                                    engine=eng)) == 1.0
+    # threshold form agrees exactly on the deterministic chain
+    assert float(lt_threshold_influence(g, np.array([0]), key,
+                                        num_sims=8)) == float(n)
+
+
+def test_lt_max_steps_truncates_chain():
+    n = 9
+    g = _chain_graph(n)
+    for eng in cascade.ENGINES:
+        sp = float(cascade.spread(g, np.array([0]), jax.random.key(7),
+                                  model="LT", num_sims=4, max_steps=3,
+                                  engine=eng))
+        assert sp == 4.0          # seed + 3 expansion steps
+
+
+def test_lt_threshold_restructure_bit_identical():
+    """The mass-once-per-step loop reproduces the old
+    recompute-in-cond-and-body loop bit-for-bit (including under
+    max_steps truncation): once growth stops the extra body iteration
+    is a no-op union."""
+    g = generators.erdos_renyi(45, 5.0, seed=8)
+    rev_nbr, _p, rev_wt = padded_adjacency(g)
+    n = g.num_vertices
+    seeds_mask = cascade.seeds_to_mask(n, np.array([0, 5]))
+
+    def old_style(key, num_sims, max_steps):
+        def one_sim(k):
+            tau = jax.random.uniform(k, (n,))
+
+            def mass_of(active):
+                act_src = jnp.where(rev_nbr >= 0,
+                                    active[jnp.clip(rev_nbr, 0)], False)
+                return jnp.sum(jnp.where(act_src, rev_wt, 0.0), axis=1)
+
+            def body(state):
+                active, step = state
+                return active | (mass_of(active) >= tau), step + 1
+
+            def cond(state):
+                active, step = state
+                grew = jnp.any((mass_of(active) >= tau) & ~active)
+                return grew & (step < max_steps)
+
+            active, _ = jax.lax.while_loop(cond, body, (seeds_mask, 0))
+            return jnp.sum(active)
+
+        counts = jax.lax.map(one_sim, jax.random.split(key, num_sims))
+        return jnp.mean(counts.astype(jnp.float32))
+
+    for max_steps in (2, 64):
+        key = jax.random.key(9)
+        want = float(old_style(key, 32, max_steps))
+        got = float(lt_threshold_influence(g, np.array([0, 5]), key,
+                                           num_sims=32,
+                                           max_steps=max_steps))
+        assert want == got
+
+
+def test_lt_live_edge_matches_threshold_distribution():
+    """Kempe et al. equivalence: live-edge and threshold LT estimate
+    the same sigma — agree within MC noise at moderate sims."""
+    g = generators.erdos_renyi(60, 5.0, seed=9)
+    seeds = np.array([0, 3])
+    a = float(influence(g, seeds, jax.random.key(0), model="LT",
+                        num_sims=300))
+    b = float(lt_threshold_influence(g, seeds, jax.random.key(1),
+                                     num_sims=300))
+    assert abs(a - b) <= 0.25 * max(a, b)
+
+
+# ---------------------------------------------------------------------
+# Kernel-engine launch pin
+# ---------------------------------------------------------------------
+
+def test_kernel_engine_step_is_one_pallas_call():
+    """The fused cascade step lowers to exactly ONE pallas_call (the
+    shared rrr_expand kernel); the map/packed engines lower to none."""
+    g = generators.erdos_renyi(40, 4.0, seed=10)
+    seeds = np.array([0, 1])
+
+    def trace(engine):
+        return str(jax.make_jaxpr(
+            lambda k: cascade.simulate_cascades(
+                g, seeds, k, model="IC", num_sims=32, max_steps=4,
+                engine=engine))(jax.random.key(0)))
+
+    assert trace("kernel").count("pallas_call") == 1
+    assert trace("packed").count("pallas_call") == 0
+    assert trace("map").count("pallas_call") == 0

@@ -64,3 +64,18 @@ def test_ripples_equals_sequential_greedy(incidence):
 def test_partition_is_permutation():
     perm = randgreedi.partition_permutation(100, jax.random.key(0))
     assert sorted(np.asarray(perm).tolist()) == list(range(100))
+
+
+def test_winning_cover_returned(incidence):
+    """RandGreediResult.covered is the winning branch's cover union:
+    its popcount equals the reported coverage, for both aggregators
+    (the spread harness's consistency check)."""
+    X, _ = incidence
+    rows = jnp.asarray(X)
+    for aggregator in ("greedy", "streaming"):
+        res = randgreedi.randgreedi_maxcover(rows, jax.random.key(2),
+                                             m=4, k=8,
+                                             aggregator=aggregator)
+        assert res.covered.shape == (rows.shape[1],)
+        pop = int(np.sum(np.asarray(bitset.popcount(res.covered))))
+        assert pop == int(res.coverage)
