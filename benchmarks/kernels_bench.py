@@ -438,6 +438,51 @@ def bench_spread_gate(fast: bool):
            f"variants={len(spread_gate.VARIANTS)} quality=PASS")
 
 
+def bench_service(fast: bool):
+    """Online serving (``repro.core.service``): B concurrent
+    seed-constrained queries answered by ONE vmapped solve over the
+    shared resident pool vs B sequential ``answer_one`` calls.
+
+    The [n, W] row pool is SHARED across the batch (``in_axes=None``)
+    — the per-query fan-out is only the O(W + k + E) solve state
+    (``per_query_state_bytes``: covered words + seed/gain slots +
+    exclusion slots), vs the B * n * W bytes a replicated-pool batch
+    would touch.  That state model is carried on the row; batched ==
+    sequential bit-identity is asserted for every query before
+    anything is recorded (the serving acceptance criterion)."""
+    from repro.core import service as svc
+    from repro.graphs import generators
+    from repro.launch.serve import make_trace
+
+    n, avg_deg, theta, batch, k_max = ((256, 6.0, 512, 8, 6) if fast
+                                       else (1024, 8.0, 2048, 16, 8))
+    g = generators.erdos_renyi(n, avg_deg, seed=17)
+    pool = svc.make_pool(g, jax.random.PRNGKey(17), theta=theta)
+    trace = make_trace(n, batch, seed=19, k_max=k_max)
+
+    batched = svc.answer_batch(pool, trace, solver="resident")
+    for q, a in zip(trace, batched):
+        one = svc.answer_one(pool, q, solver="resident")
+        np.testing.assert_array_equal(a.seeds, one.seeds)
+        assert (a.k_used, a.coverage) == (one.k_used, one.coverage)
+
+    t_batch = timeit(lambda: svc.answer_batch(pool, trace,
+                                              solver="resident"))
+    t_seq = timeit(lambda: [svc.answer_one(pool, q, solver="resident")
+                            for q in trace])
+
+    e_max = max(1, max(len(q.excluded) for q in trace))
+    state = svc.per_query_state_bytes(pool.words, k_max, e_max)
+    shared = n * pool.words * 4
+    record(f"service/batched_queries/n={n},theta={theta},B={batch}",
+           t_batch * 1e6 / batch,
+           f"queries_per_s={batch/t_batch:.1f} "
+           f"seq_us_per_query={t_seq*1e6/batch:.1f} "
+           f"per_query_state_bytes={state} shared_pool_bytes={shared} "
+           f"fanout_ratio={shared/state:.0f}x parity=sequential-exact "
+           f"cpu_mode=interpret-emulation")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", default=None, metavar="OUT",
@@ -461,6 +506,7 @@ def main(argv=None):
         bench_sender(args.fast)
         bench_sampler(args.fast)
         bench_cascade(args.fast)
+        bench_service(args.fast)
         bench_spread_gate(args.fast)
     calib = min(calib, calibration_us())
     for name, row in _RESULTS.items():

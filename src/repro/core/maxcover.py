@@ -79,14 +79,26 @@ def resolve_solver(solver: str | None,
     return solver
 
 
+def _no_exclusions() -> jnp.ndarray:
+    """The empty seed-constraint: one -1 pad slot (matches no row)."""
+    return jnp.full((1,), -1, dtype=jnp.int32)
+
+
 def greedy_maxcover(rows: jnp.ndarray, k: int,
                     use_kernel: bool | None = None,
-                    solver: str | None = None) -> CoverSolution:
+                    solver: str | None = None,
+                    excluded: jnp.ndarray | None = None) -> CoverSolution:
     """Vectorized greedy max-k-cover.
 
     rows: uint32 [n, W] packed covering sets. Returns the greedy
     (1 - 1/e)-approximate solution.  ``solver`` picks the execution
     path (see module docstring); all paths are bit-identical.
+
+    ``excluded`` (int32 [E] row ids, -1 pads ignored) forbids rows
+    from ever being selected — the per-query seed-constraint of the
+    serving path (``repro.core.service``).  Excluded rows are masked
+    exactly like already-picked rows on every solver, so the quad
+    stays bit-identical under any exclusion set.
 
     Thin un-jitted shim: the solver quad (and the deprecated
     ``use_kernel`` alias, with its warning) resolves eagerly here so
@@ -94,18 +106,53 @@ def greedy_maxcover(rows: jnp.ndarray, k: int,
     call, not only at trace time; the jitted body is dispatched with
     the resolved solver as a static argument.
     """
-    return _greedy_maxcover(rows, k, resolve_solver(solver, use_kernel))
+    if excluded is None:
+        excluded = _no_exclusions()
+    return _greedy_maxcover(rows, jnp.asarray(excluded, jnp.int32), k,
+                            resolve_solver(solver, use_kernel))
+
+
+def greedy_maxcover_batch(rows: jnp.ndarray, excluded: jnp.ndarray,
+                          k: int,
+                          solver: str | None = None) -> CoverSolution:
+    """Batched greedy max-k-cover: B seed-constrained queries against
+    ONE shared row pool in a single vmapped solve.
+
+    rows: uint32 [n, W] shared packed pool (``in_axes=None`` — the row
+    stream is not replicated per query); excluded: int32 [B, E] per-
+    query exclusion ids (-1 pads).  Returns a ``CoverSolution`` whose
+    every leaf has a leading [B] axis; slice b is bit-identical to
+    ``greedy_maxcover(rows, k, solver=..., excluded=excluded[b])`` for
+    all four solvers.  Mixed per-query k is handled above this layer
+    (``repro.core.service``) by solving at max(k) and truncating —
+    greedy picks are prefix-consistent, so the truncation is exact.
+    """
+    return _greedy_maxcover_batch(rows, jnp.asarray(excluded, jnp.int32),
+                                  k, resolve_solver(solver))
 
 
 @functools.partial(jax.jit, static_argnames=("k", "solver"))
-def _greedy_maxcover(rows: jnp.ndarray, k: int,
+def _greedy_maxcover(rows: jnp.ndarray, excluded: jnp.ndarray, k: int,
                      solver: str) -> CoverSolution:
+    return _solve_one(rows, excluded, k, solver)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "solver"))
+def _greedy_maxcover_batch(rows: jnp.ndarray, excluded: jnp.ndarray,
+                           k: int, solver: str) -> CoverSolution:
+    return jax.vmap(lambda ex: _solve_one(rows, ex, k, solver))(excluded)
+
+
+def _solve_one(rows: jnp.ndarray, excluded: jnp.ndarray, k: int,
+               solver: str) -> CoverSolution:
+    """One greedy solve (trace-level body — vmapped by the batch entry
+    point, so everything here must be vmap-compatible)."""
     n, w = rows.shape
 
     if solver == "resident":
         from repro.kernels import ops as kops
         seeds, sel_rows, covered, gains = kops.greedy_maxcover_resident(
-            rows, k)
+            rows, k, excluded)
         return CoverSolution(seeds, sel_rows, covered,
                              bitset.coverage_size(covered), gains)
 
@@ -114,7 +161,7 @@ def _greedy_maxcover(rows: jnp.ndarray, k: int,
         # The tiles-swept diagnostic is dropped here (CoverSolution is
         # solver-agnostic); benchmarks read it off the kernel wrapper.
         seeds, sel_rows, covered, gains, _ = kops.greedy_maxcover_lazy(
-            rows, k)
+            rows, k, excluded)
         return CoverSolution(seeds, sel_rows, covered,
                              bitset.coverage_size(covered), gains)
 
@@ -145,7 +192,11 @@ def _greedy_maxcover(rows: jnp.ndarray, k: int,
     covered = jnp.zeros((w,), dtype=bitset.WORD_DTYPE)
     seeds = jnp.full((k,), -1, dtype=jnp.int32)
     sel_rows = jnp.zeros((k, w), dtype=bitset.WORD_DTYPE)
-    picked = jnp.zeros((n,), dtype=bool)
+    # Exclusions seed the picked mask: masked to gain -1 from pick 0,
+    # exactly how the resident/lazy kernels mask their excl-ids block.
+    valid = (excluded >= 0) & (excluded < n)
+    picked = jnp.zeros((n,), dtype=bool).at[
+        jnp.where(valid, excluded, 0)].max(valid)
     gains = jnp.zeros((k,), dtype=jnp.int32)
     covered, seeds, sel_rows, picked, gains = jax.lax.fori_loop(
         0, k, body, (covered, seeds, sel_rows, picked, gains))

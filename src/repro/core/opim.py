@@ -49,6 +49,27 @@ def _sigma_upper(cov_ub: float, theta: int, n: int, delta: float) -> float:
         * n / theta
 
 
+def certify(cov_sel: float, cov_val: float, theta: int, n: int,
+            delta: float, alpha: float) -> tuple[float, float, float]:
+    """Instance-wise OPIM certificate from one selection/validation
+    coverage pair.
+
+    ``cov_sel`` is the greedy coverage of the selected seeds on the
+    selection half (R1) — divided by the solver's approximation factor
+    ``alpha`` it upper-bounds OPT's R1 coverage; ``cov_val`` is the
+    same seeds' coverage on the held-out validation half (R2), which
+    lower-bounds sigma(S) by Chernoff concentration.  Returns
+    ``(sigma_lower, sigma_upper_opt, guarantee)`` with
+    ``guarantee = sigma_lower / sigma_upper_opt`` — the certified
+    instance-wise approximation ratio.  Shared by the OPIM-C driver
+    loop below and the online serving admission rule
+    (``repro.core.service``), so the two have one bound
+    implementation."""
+    sig_l = _sigma_lower(cov_val, theta, n, delta)
+    sig_u = _sigma_upper(cov_sel / alpha, theta, n, delta)
+    return sig_l, sig_u, sig_l / max(sig_u, 1e-9)
+
+
 def opim(g: CSRGraph, k: int, eps: float, key, *, model: str = "IC",
          selector: Optional[Selector] = None,
          solver_alpha: Optional[float] = None,
@@ -96,9 +117,8 @@ def opim(g: CSRGraph, k: int, eps: float, key, *, model: str = "IC",
             theta = new_theta
         seeds, cov1 = selector(r1, k, jax.random.fold_in(key, 0xA0 + i))
         cov2 = maxcover.coverage_of(np.asarray(r2), np.asarray(seeds))
-        sig_l = _sigma_lower(float(cov2), theta, n, delta)
-        sig_u = _sigma_upper(float(cov1) / solver_alpha, theta, n, delta)
-        guar = sig_l / max(sig_u, 1e-9)
+        sig_l, sig_u, guar = certify(float(cov1), float(cov2), theta, n,
+                                     delta, solver_alpha)
         result = OPIMResult(np.asarray(seeds), guar, sig_l, sig_u, theta,
                             i + 1)
         if guar >= target or theta >= max_theta:

@@ -66,7 +66,10 @@ def sweep_tile_argmax(tile, covered, seeds, t, block_v: int):
 
     tile    uint32 [BV, Wp]  row tile (VMEM)
     covered uint32 [1, Wp]   running cover
-    seeds   int32  [1, k]    resident picked set (-1 = empty slot)
+    seeds   int32  [1, M]    masked row ids (-1 = empty slot) — the
+                             resident picked set, optionally
+                             concatenated with a per-query excluded-ids
+                             block (seed-constraint serving)
 
     Returns (gain int32, index int32) of the tile's best row with
     ``jnp.argmax``'s lowest-index preference; rows whose global index
@@ -101,12 +104,16 @@ def commit_pick(pick, best_gain, best_idx, winner_buf, covered_ref,
         hit, jnp.where(take, best_gain, 0), gains_ref[...])
 
 
-def _kernel(rows_hbm, seeds_ref, rows_out_ref, covered_ref, gains_ref,
-            tile_buf, winner_buf, tile_sem, win_sem, *,
+def _kernel(rows_hbm, excl_ref, seeds_ref, rows_out_ref, covered_ref,
+            gains_ref, tile_buf, winner_buf, tile_sem, win_sem, *,
             block_v: int):
     """One program: the entire k-pick greedy loop.
 
     rows_hbm    uint32 [n_pad, Wp]  HBM/ANY — streamed, never resident
+    excl_ref    int32  [1, E]       VMEM in — excluded row ids (-1 =
+                                    empty slot; seed-constraint mask
+                                    of the serving path, masked
+                                    exactly like the picked set)
     seeds_ref   int32  [1, k]       VMEM out (doubles as picked set)
     rows_out_ref uint32 [k, Wp]     VMEM out (selected rows)
     covered_ref uint32 [1, Wp]      VMEM out (running union)
@@ -148,8 +155,10 @@ def _kernel(rows_hbm, seeds_ref, rows_out_ref, covered_ref, gains_ref,
                 tile_dma(jax.lax.rem(t + 1, 2), t + 1).start()
 
             tile_dma(slot, t).wait()
+            mask_ids = jnp.concatenate(
+                [seeds_ref[...], excl_ref[...]], axis=1)
             ga, a = sweep_tile_argmax(tile_buf[slot], covered_ref[...],
-                                      seeds_ref[...], t, block_v)
+                                      mask_ids, t, block_v)
             bg, bi = best
             better = ga > bg                 # strict: keep lowest tile
             return (jnp.where(better, ga, bg),
@@ -174,6 +183,7 @@ def _kernel(rows_hbm, seeds_ref, rows_out_ref, covered_ref, gains_ref,
 
 @functools.partial(jax.jit, static_argnames=("k", "block_v", "interpret"))
 def greedy_maxcover_resident_pallas(rows: jnp.ndarray, k: int,
+                                    excluded: jnp.ndarray | None = None,
                                     block_v: int = BLOCK_V,
                                     interpret: bool = False):
     """Resident greedy max-k-cover: rows uint32 [n, W] ->
@@ -187,8 +197,19 @@ def greedy_maxcover_resident_pallas(rows: jnp.ndarray, k: int,
     vector).  Zero row/word padding is exact: padded rows have gain 0
     and are never taken (see ``_kernel``), padded words contribute
     popcount 0.
+
+    ``excluded`` (int32 [E], -1 = empty slot) forbids row ids from ever
+    being picked — the per-query seed-constraint of the serving path
+    (``repro.core.service``).  Excluded ids are masked to gain -1 in
+    every sweep, exactly like already-picked rows, so the outputs match
+    the scan solver with the same ids pre-set in its picked mask
+    bit-for-bit.  The [1, E] block rides in VMEM next to the seeds —
+    per-query state stays O(k + E + W), independent of n.
     """
     n, w = rows.shape
+    if excluded is None:
+        excluded = jnp.full((1,), -1, jnp.int32)
+    excl = jnp.asarray(excluded, jnp.int32).reshape(1, -1)
     bv = gain_core.effective_block(
         n, block_v, gain_core.SUBLANE)
     bv = gain_core.padded_size(bv, gain_core.SUBLANE)
@@ -198,7 +219,8 @@ def greedy_maxcover_resident_pallas(rows: jnp.ndarray, k: int,
         rows = jnp.pad(rows, ((0, n_pad - n), (0, wp - w)))
     seeds, sel_rows, covered, gains = pl.pallas_call(
         functools.partial(_kernel, block_v=bv),
-        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),
+                  pl.BlockSpec(memory_space=pltpu.VMEM)],
         out_specs=[
             pl.BlockSpec(memory_space=pltpu.VMEM),
             pl.BlockSpec(memory_space=pltpu.VMEM),
@@ -218,5 +240,5 @@ def greedy_maxcover_resident_pallas(rows: jnp.ndarray, k: int,
             pltpu.SemaphoreType.DMA(()),
         ],
         interpret=interpret,
-    )(rows)
+    )(rows, excl)
     return seeds[0], sel_rows[:, :w], covered[0, :w], gains[0]

@@ -95,12 +95,17 @@ def num_row_tiles(n: int, block_v: int = BLOCK_V) -> int:
     return gain_core.padded_size(n, bv) // bv
 
 
-def _kernel(rows_hbm, seeds_ref, rows_out_ref, covered_ref, gains_ref,
-            swept_ref, ub_ref, best_ref, cnt_ref, tile_buf, winner_buf,
-            tile_sem, win_sem, *, block_v: int):
+def _kernel(rows_hbm, excl_ref, seeds_ref, rows_out_ref, covered_ref,
+            gains_ref, swept_ref, ub_ref, best_ref, cnt_ref, tile_buf,
+            winner_buf, tile_sem, win_sem, *, block_v: int):
     """One program: the entire k-pick lazy-greedy loop.
 
     rows_hbm    uint32 [n_pad, Wp]  HBM/ANY — streamed, never resident
+    excl_ref    int32  [1, E]       VMEM in — excluded row ids (-1 =
+                                    empty; the serving seed-constraint,
+                                    masked like the picked set; fixed
+                                    for the whole solve, so the stale
+                                    bounds stay valid upper bounds)
     seeds_ref   int32  [1, k]       VMEM out (doubles as picked set)
     rows_out_ref uint32 [k, Wp]     VMEM out (selected rows)
     covered_ref uint32 [1, Wp]      VMEM out (running union)
@@ -167,8 +172,10 @@ def _kernel(rows_hbm, seeds_ref, rows_out_ref, covered_ref, gains_ref,
             @pl.when(d_cur)
             def _sweep():
                 tile_dma(slot, t).wait()
+                mask_ids = jnp.concatenate(
+                    [seeds_ref[...], excl_ref[...]], axis=1)
                 ga, a = greedy_pick.sweep_tile_argmax(
-                    tile_buf[slot], covered_ref[...], seeds_ref[...],
+                    tile_buf[slot], covered_ref[...], mask_ids,
                     t, block_v)
                 # Refresh the stale bound: the fresh masked max upper-
                 # bounds every later pick's masked max of this tile.
@@ -204,6 +211,7 @@ def _kernel(rows_hbm, seeds_ref, rows_out_ref, covered_ref, gains_ref,
 
 @functools.partial(jax.jit, static_argnames=("k", "block_v", "interpret"))
 def greedy_maxcover_lazy_pallas(rows: jnp.ndarray, k: int,
+                                excluded: jnp.ndarray | None = None,
                                 block_v: int = BLOCK_V,
                                 interpret: bool = False):
     """Lazy-greedy resident max-k-cover: rows uint32 [n, W] ->
@@ -217,11 +225,20 @@ def greedy_maxcover_lazy_pallas(rows: jnp.ndarray, k: int,
     behaviour (best gain <= 0 -> seed -1, gain 0, no cover update).
     Zero row/word padding is exact exactly as in ``greedy_pick``.
 
+    ``excluded`` (int32 [E], -1 = empty slot) forbids row ids from
+    ever being picked — the serving seed-constraint, masked like the
+    picked set (see ``greedy_pick``).  The exclusion set is fixed for
+    the whole solve, so swept-tile maxima remain monotone
+    non-increasing and the stale bounds stay valid.
+
     ``tiles_swept`` counts the row tiles actually DMA'd + re-swept
     across all k picks; the skip ratio is
     ``tiles_swept / (k * num_row_tiles(n, block_v))``.
     """
     n, w = rows.shape
+    if excluded is None:
+        excluded = jnp.full((1,), -1, jnp.int32)
+    excl = jnp.asarray(excluded, jnp.int32).reshape(1, -1)
     bv = gain_core.effective_block(n, block_v, gain_core.SUBLANE)
     bv = gain_core.padded_size(bv, gain_core.SUBLANE)
     n_pad = gain_core.padded_size(n, bv)
@@ -232,7 +249,8 @@ def greedy_maxcover_lazy_pallas(rows: jnp.ndarray, k: int,
     tp = gain_core.padded_size(num_tiles, gain_core.LANE)
     seeds, sel_rows, covered, gains, swept = pl.pallas_call(
         functools.partial(_kernel, block_v=bv),
-        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),
+                  pl.BlockSpec(memory_space=pltpu.VMEM)],
         out_specs=[
             pl.BlockSpec(memory_space=pltpu.VMEM),
             pl.BlockSpec(memory_space=pltpu.VMEM),
@@ -257,6 +275,6 @@ def greedy_maxcover_lazy_pallas(rows: jnp.ndarray, k: int,
             pltpu.SemaphoreType.DMA(()),
         ],
         interpret=interpret,
-    )(rows)
+    )(rows, excl)
     return (seeds[0], sel_rows[:, :w], covered[0, :w], gains[0],
             swept[0, 0])

@@ -41,21 +41,53 @@ def best_gain_index(rows: jnp.ndarray, covered: jnp.ndarray,
                                   interpret=_interpret())
 
 
-def greedy_maxcover_resident(rows: jnp.ndarray, k: int):
+def greedy_maxcover_resident(rows: jnp.ndarray, k: int,
+                             excluded: jnp.ndarray | None = None):
     """Resident greedy max-k-cover (the ``solver="resident"`` engine):
     all k picks in ONE pallas_call, covered/picked/seeds/gains
-    VMEM-resident for the whole loop, rows double-buffered HBM->VMEM."""
-    return greedy_maxcover_resident_pallas(rows, k,
+    VMEM-resident for the whole loop, rows double-buffered HBM->VMEM.
+    ``excluded`` (int32 [E] ids, -1 pads) forbids rows from being
+    picked — the serving seed-constraint."""
+    return greedy_maxcover_resident_pallas(rows, k, excluded,
                                            interpret=_interpret())
 
 
-def greedy_maxcover_lazy(rows: jnp.ndarray, k: int):
+def greedy_maxcover_lazy(rows: jnp.ndarray, k: int,
+                         excluded: jnp.ndarray | None = None):
     """Lazy-greedy resident max-k-cover (the ``solver="lazy"`` engine):
     one pallas_call like the resident solver, but each pick only DMAs +
     re-sweeps row tiles whose VMEM-resident stale upper bound can still
     beat the running best gain.  Returns the resident tuple plus a
-    ``tiles_swept`` counter (skip ratio = swept / (k * num_tiles))."""
-    return greedy_maxcover_lazy_pallas(rows, k, interpret=_interpret())
+    ``tiles_swept`` counter (skip ratio = swept / (k * num_tiles)).
+    ``excluded`` as in :func:`greedy_maxcover_resident`."""
+    return greedy_maxcover_lazy_pallas(rows, k, excluded,
+                                       interpret=_interpret())
+
+
+def greedy_maxcover_resident_batch(rows: jnp.ndarray, k: int,
+                                   excluded: jnp.ndarray):
+    """Batched-query entry point: B concurrent seed-constrained solves
+    over ONE shared [n, W] row pool in a single vmapped resident
+    kernel.  ``excluded`` is int32 [B, E] (-1 pads); the row stream is
+    NOT replicated per query (``in_axes=None``) — only the tiny
+    VMEM-resident query state (covered words + k seed slots + E
+    exclusion slots) fans out across the batch.  Returns the resident
+    tuple with a leading [B] axis, each slice bit-identical to the
+    sequential per-query call."""
+    return jax.vmap(
+        lambda ex: greedy_maxcover_resident_pallas(
+            rows, k, ex, interpret=_interpret()))(excluded)
+
+
+def greedy_maxcover_lazy_batch(rows: jnp.ndarray, k: int,
+                               excluded: jnp.ndarray):
+    """Batched-query lazy solve: as
+    :func:`greedy_maxcover_resident_batch` but with the per-tile
+    stale-bound skipping (each query keeps its own [num_tiles] bound
+    vector — bounds depend on the query's exclusion set)."""
+    return jax.vmap(
+        lambda ex: greedy_maxcover_lazy_pallas(
+            rows, k, ex, interpret=_interpret()))(excluded)
 
 
 def rrr_expand_step(frontier: jnp.ndarray, visited: jnp.ndarray,

@@ -107,8 +107,22 @@ def main(argv=None):
                          "set on ALL cascade engines and assert the "
                          "measured spreads are identical (the "
                          "spread-gate cross-check, inline)")
+    ap.add_argument("--serve", action="store_true",
+                    help="instead of one offline selection, run the "
+                         "online serving replay (resident sketch pool "
+                         "+ batched queries; see repro.launch.serve) "
+                         "on the same graph/model/solver flags")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.serve:
+        from repro.launch import serve
+        return serve.main([
+            "--graph", args.graph, "--n", str(args.n),
+            "--avg-deg", str(args.avg_deg), "--model", args.model,
+            "--solver", args.solver or "resident",
+            "--sampler", args.sampler, "--k-max", str(args.k),
+            "--max-theta", str(args.max_theta),
+            "--seed", str(args.seed), "--check"])
     chunk_size = (args.chunk_size if args.chunk_size == "auto"
                   else int(args.chunk_size) or None)
     if args.use_kernel:

@@ -1,0 +1,163 @@
+"""Online influence service driver: replay a query trace against the
+resident sketch pool (``repro.core.service``).
+
+  PYTHONPATH=src python -m repro.launch.serve --n 256 --queries 16 \
+      --batch 8 --solver resident --check
+
+Generates a deterministic trace of (k, seed-constraint, budget)
+queries, admits them in batches of ``--batch`` through
+:class:`~repro.core.service.InfluenceService` (ONE vmapped solve per
+batch over the shared pool), and reports throughput.  ``--check``
+additionally replays every query through the sequential
+``answer_one`` reference and exits non-zero unless the batched answers
+are bit-identical — the serve smoke gate CI runs.  ``--refresh-every``
+forces a pool refresh between batches so the replay also exercises the
+generation-drain path (tickets admitted before the refresh complete on
+their old generation's pool).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core import service as svc
+from repro.core.service import InfluenceService, Query
+from repro.launch.im_driver import make_graph
+
+
+def make_trace(n: int, num_queries: int, seed: int,
+               *, k_max: int = 8, excl_max: int = 6,
+               budget_frac: float = 0.25) -> list[Query]:
+    """Deterministic query trace: mixed k, mixed-length exclusion
+    sets (seed-constraints), and a sprinkle of spread budgets."""
+    rng = np.random.default_rng(seed)
+    trace = []
+    for _ in range(num_queries):
+        k = int(rng.integers(1, k_max + 1))
+        e = int(rng.integers(0, excl_max + 1))
+        excluded = tuple(int(v) for v in
+                         rng.choice(n, size=e, replace=False)) if e else ()
+        budget = (float(rng.uniform(1.0, budget_frac * n))
+                  if rng.random() < 0.3 else None)
+        trace.append(Query(k=k, excluded=excluded, budget=budget))
+    return trace
+
+
+def replay(service: InfluenceService, trace: list[Query], *,
+           batch: int, refresh_every: int = 0):
+    """Admit and answer the trace in batches.  Returns
+    (answers, pools-by-generation, elapsed seconds).  With
+    ``refresh_every`` > 0, a refresh is injected after every that-many
+    batches WITH the next batch's tickets already admitted — the
+    in-flight tickets then drain on their old generation.  The pool
+    snapshot dict keeps every generation that answered alive for the
+    ``--check`` replay (the service itself retires drained pools)."""
+    answers = []
+    pools = {}
+    t0 = time.time()
+    for i in range(0, len(trace), batch):
+        tickets = [service.admit(q) for q in trace[i:i + batch]]
+        if refresh_every and (i // batch + 1) % refresh_every == 0 \
+                and service.pool.theta < service.max_theta:
+            service.refresh()          # tickets drain on the old tag
+        for t in tickets:
+            pools[t.generation] = service._pools[t.generation]
+        answers.extend(service.answer(tickets))
+    return answers, pools, time.time() - t0
+
+
+def check_bit_identity(service: InfluenceService, pools: dict,
+                       trace: list[Query], answers: list) -> int:
+    """Replay each query through the sequential ``answer_one``
+    reference on the generation that answered it (``pools`` holds the
+    snapshot — the service may have retired drained generations);
+    count mismatches."""
+    mismatches = 0
+    for q, a in zip(trace, answers):
+        ref = svc.answer_one(pools[a.generation], q,
+                             solver=service.solver,
+                             delta=service.delta, alpha=service.alpha)
+        same = (np.array_equal(a.seeds, ref.seeds)
+                and a.k_used == ref.k_used
+                and a.coverage == ref.coverage
+                and a.sigma_lower == ref.sigma_lower
+                and a.sigma_upper == ref.sigma_upper)
+        if not same:
+            mismatches += 1
+            print(f"[serve] MISMATCH k={q.k} excluded={q.excluded} "
+                  f"budget={q.budget}: batched seeds={a.seeds} "
+                  f"cov={a.coverage} vs sequential seeds={ref.seeds} "
+                  f"cov={ref.coverage}", file=sys.stderr)
+    return mismatches
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graph", default="er", choices=("er", "ba", "rmat"))
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--avg-deg", type=float, default=6.0)
+    ap.add_argument("--model", default="IC", choices=("IC", "LT"))
+    ap.add_argument("--queries", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="concurrent queries per vmapped solve")
+    ap.add_argument("--k-max", type=int, default=8)
+    ap.add_argument("--solver", default="resident",
+                    choices=("scan", "fused", "resident", "lazy"))
+    ap.add_argument("--sampler", default="dense",
+                    choices=("dense", "packed", "kernel"))
+    ap.add_argument("--theta0", type=int, default=512)
+    ap.add_argument("--max-theta", type=int, default=1 << 12)
+    ap.add_argument("--slab", type=int, default=256)
+    ap.add_argument("--refresh-every", type=int, default=0,
+                    help="refresh the pool after every N batches, with "
+                         "that batch's tickets draining on the old "
+                         "generation (0 = never)")
+    ap.add_argument("--check", action="store_true",
+                    help="replay every query through the sequential "
+                         "answer_one reference and exit non-zero on "
+                         "any batched-vs-sequential mismatch (the CI "
+                         "serve smoke gate)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    g = make_graph(args.graph, args.n, args.avg_deg, args.seed)
+    service = InfluenceService(
+        g, jax.random.PRNGKey(args.seed), theta0=args.theta0,
+        max_theta=args.max_theta, slab=args.slab, solver=args.solver,
+        model=args.model, sampler=args.sampler)
+    trace = make_trace(g.num_vertices, args.queries, args.seed + 1,
+                       k_max=args.k_max)
+    print(f"[serve] graph n={g.num_vertices} m={g.num_edges} "
+          f"solver={args.solver} trace={len(trace)} queries "
+          f"(batch={args.batch})")
+
+    answers, pools, elapsed = replay(service, trace, batch=args.batch,
+                                     refresh_every=args.refresh_every)
+    gens = sorted({a.generation for a in answers})
+    certified = sum(a.certified for a in answers)
+    state = svc.per_query_state_bytes(service.pool.words, args.k_max,
+                                      max(len(q.excluded) for q in trace))
+    print(f"[serve] {len(answers)} answers in {elapsed:.2f}s "
+          f"({len(answers) / max(elapsed, 1e-9):.1f} queries/s)  "
+          f"generations={gens} theta={service.pool.theta} "
+          f"certified={certified}/{len(answers)} "
+          f"per-query-state={state}B")
+
+    if args.check:
+        bad = check_bit_identity(service, pools, trace, answers)
+        if bad:
+            print(f"[serve] FAIL: {bad}/{len(trace)} batched answers "
+                  f"differ from the sequential reference",
+                  file=sys.stderr)
+            return 1
+        print(f"[serve] check OK: all {len(trace)} batched answers "
+              f"bit-identical to the sequential reference")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,15 +10,6 @@ SRC = os.path.join(REPO, "src")
 sys.path.insert(0, SRC)
 sys.path.insert(0, REPO)
 
-# The CI container has no network and no `hypothesis` wheel; fall back
-# to the dependency-free shim so the property-based modules still
-# collect and run (deterministic sampling, no shrinking).
-try:
-    import hypothesis  # noqa: F401
-except ModuleNotFoundError:
-    from tests import _hypothesis_compat
-    _hypothesis_compat.install()
-
 
 def run_with_devices(code: str, num_devices: int = 8, timeout: int = 560):
     """Run a python snippet in a subprocess with N fake host devices

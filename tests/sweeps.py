@@ -1,0 +1,32 @@
+"""Deterministic parameter sweeps for the former property-based tests.
+
+The suite used a tiny vendored stand-in for ``hypothesis``
+(``tests/_hypothesis_compat.py``) because the CI container has no
+network: deterministic uniform sampling seeded from the test name, no
+shrinking, no example database.  That is exactly what
+``pytest.mark.parametrize`` over a seeded sweep expresses natively —
+so the shim is gone and the sweeps are plain test parameters: every
+example is visible in the pytest id (``-k "n0-theta16"`` style
+selection works), failures replay without any framework, and the
+collected test count reflects the real example count.
+
+``int_sweep(name, num, *ranges)`` reproduces the shim's draw protocol
+(one ``default_rng(crc32(name))`` stream, one uniform int per range
+per example, inclusive bounds) so the converted tests keep exercising
+the same kind of example distribution they always did.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+
+def int_sweep(name: str, num: int, *ranges: tuple[int, int]):
+    """``num`` deterministic examples for ``name``, each a tuple with
+    one uniform int per inclusive ``(lo, hi)`` range.  Seeded from the
+    sweep name (crc32, like the former shim) so sweeps are stable
+    across runs/machines and independent across tests."""
+    rng = np.random.default_rng(zlib.crc32(name.encode()))
+    return [tuple(int(rng.integers(lo, hi + 1)) for (lo, hi) in ranges)
+            for _ in range(num)]

@@ -1,13 +1,13 @@
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
 
 from repro.core import bitset
+from tests.sweeps import int_sweep
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.integers(1, 200), st.integers(1, 300), st.integers(0, 2**31))
+@pytest.mark.parametrize("n,theta,seed", int_sweep(
+    "pack_unpack_roundtrip", 30, (1, 200), (1, 300), (0, 2**31)))
 def test_pack_unpack_roundtrip(n, theta, seed):
     rng = np.random.default_rng(seed)
     dense = rng.random((n, theta)) < 0.3
@@ -17,8 +17,8 @@ def test_pack_unpack_roundtrip(n, theta, seed):
     np.testing.assert_array_equal(np.asarray(back), dense)
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.integers(1, 100), st.integers(1, 200), st.integers(0, 2**31))
+@pytest.mark.parametrize("n,theta,seed", int_sweep(
+    "coverage_and_gain_match_dense", 30, (1, 100), (1, 200), (0, 2**31)))
 def test_coverage_and_gain_match_dense(n, theta, seed):
     rng = np.random.default_rng(seed)
     dense = rng.random((n, theta)) < 0.2

@@ -2,10 +2,9 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.kernels import ref
+from tests.sweeps import int_sweep
 from repro.kernels.bucket import bucket_gains_pallas
 from repro.kernels.coverage import marginal_gain_pallas
 from repro.kernels.topk_gain import best_gain_index_pallas
@@ -60,9 +59,9 @@ def test_topk_kernel_matches_ref(n, w):
     assert gains[int(bi)] == int(wg)
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(1, 64), st.integers(1, 64), st.integers(0, 2**31))
-def test_coverage_kernel_hypothesis(n, w, seed):
+@pytest.mark.parametrize("n,w,seed", int_sweep(
+    "coverage_kernel_sweep", 20, (1, 64), (1, 64), (0, 2**31)))
+def test_coverage_kernel_sweep(n, w, seed):
     rng = np.random.default_rng(seed)
     rows = jnp.asarray(rng.integers(0, 2**32, (n, w), dtype=np.uint32))
     cov = jnp.asarray(rng.integers(0, 2**32, (w,), dtype=np.uint32))

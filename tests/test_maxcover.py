@@ -2,10 +2,10 @@ import itertools
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
 
 from repro.core import bitset, maxcover
+from tests.sweeps import int_sweep
 
 
 def brute_force_opt(dense: np.ndarray, k: int) -> int:
@@ -33,9 +33,9 @@ def test_greedy_kernel_path_matches(incidence):
     np.testing.assert_array_equal(np.asarray(a.seeds), np.asarray(b.seeds))
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.integers(4, 10), st.integers(8, 40), st.integers(1, 3),
-       st.integers(0, 2**31))
+@pytest.mark.parametrize("n,theta,k,seed", int_sweep(
+    "greedy_approximation_bound", 15,
+    (4, 10), (8, 40), (1, 3), (0, 2**31)))
 def test_greedy_approximation_bound(n, theta, k, seed):
     """Greedy coverage >= (1 - 1/e) * OPT (exact via brute force)."""
     rng = np.random.default_rng(seed)
@@ -46,8 +46,8 @@ def test_greedy_approximation_bound(n, theta, k, seed):
     assert int(sol.coverage) >= np.floor((1 - 1 / np.e) * opt)
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.integers(3, 8), st.integers(8, 32), st.integers(0, 2**31))
+@pytest.mark.parametrize("n,theta,seed", int_sweep(
+    "coverage_function_is_submodular", 15, (3, 8), (8, 32), (0, 2**31)))
 def test_coverage_function_is_submodular(n, theta, seed):
     """C(A + x) - C(A) >= C(B + x) - C(B) for A subset B."""
     rng = np.random.default_rng(seed)

@@ -1,10 +1,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+import pytest
 
 from repro.core import bitset, maxcover, randgreedi, theory
+from tests.sweeps import int_sweep
 from tests.test_maxcover import brute_force_opt
 
 
@@ -19,8 +19,8 @@ def test_randgreedi_close_to_greedy(incidence):
     assert int(res.coverage) >= 0.75 * int(greedy.coverage)
 
 
-@settings(max_examples=10, deadline=None)
-@given(st.integers(8, 16), st.integers(16, 48), st.integers(0, 2**31))
+@pytest.mark.parametrize("n,theta,seed", int_sweep(
+    "randgreedi_expected_bound", 10, (8, 16), (16, 48), (0, 2**31)))
 def test_randgreedi_expected_bound(n, theta, seed):
     """Coverage >= RandGreedi worst-case ratio * OPT (greedy agg)."""
     k, m = 2, 2

@@ -3,16 +3,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import bitset, maxcover, streaming
+from tests.sweeps import int_sweep
 from tests.test_maxcover import brute_force_opt
 
 
-@settings(max_examples=12, deadline=None)
-@given(st.integers(5, 12), st.integers(16, 48), st.integers(1, 3),
-       st.integers(0, 2**31))
+@pytest.mark.parametrize("n,theta,k,seed", int_sweep(
+    "streaming_guarantee_vs_opt", 12,
+    (5, 12), (16, 48), (1, 3), (0, 2**31)))
 def test_streaming_guarantee_vs_opt(n, theta, k, seed):
     """McGregor-Vu: coverage >= (1/2 - delta) * OPT."""
     delta = 0.077
@@ -77,9 +76,9 @@ def test_streaming_kernel_path(incidence):
 
 
 @pytest.mark.parametrize("receiver", ["scan", "fused", "pipelined"])
-@settings(max_examples=8, deadline=None)
-@given(st.integers(6, 14), st.integers(16, 64), st.integers(1, 4),
-       st.integers(0, 2**31))
+@pytest.mark.parametrize("n,theta,k,seed", int_sweep(
+    "streaming_guarantee_vs_greedy", 8,
+    (6, 14), (16, 64), (1, 4), (0, 2**31)))
 def test_streaming_guarantee_vs_greedy(receiver, n, theta, k, seed):
     """McGregor-Vu for all three receiver paths: streamed coverage
     >= (1/2 - delta) * greedy coverage, and finalize returns the
