@@ -271,7 +271,7 @@ def bench_sender(fast: bool):
 
 def bench_sampler(fast: bool):
     """Sampler (S1) RRR BFS: dense vs packed vs the fused expansion
-    kernel.
+    kernel in both gather layouts.
 
     Frontier/visited *state* bytes touched per BFS step (read frontier
     + visited, write new + visited — both paths touch each once per
@@ -284,15 +284,24 @@ def bench_sampler(fast: bool):
       packed  S * 4*theta*n/8            + theta*n/8   bytes
               (uint32 words hold 32 samples; the incidence IS the
               visited state — no intermediate, no epilogue)
-      kernel  packed state bytes, 1 launch per BFS step (the gathered
-              [n, d_out, W] frontier intermediate of the packed XLA
-              path also never round-trips HBM)
+      kernel (streamed)  packed state bytes, 1 launch per BFS step —
+              the gathered [n, d_out, W] *frontier* intermediate never
+              round-trips HBM, but XLA still materializes the
+              rev_slot-gathered gmask [n, d_out, W] and the kernel
+              streams it back in: 2*S*n*d_out*W*4 gather-plane bytes.
+      kernel (resident)  both gathers move in-kernel: the packed
+              coin-plane (uint32 [n*d_pad, W]) is the gather source,
+              read once per launch (S*n*d_pad*W*4 bytes) plus the
+              int32 gidx stream (S*n*d_out*4); the gmask
+              materialization round-trip is GONE.
 
-    The >= 8x state ratio is asserted (model-verified) before the rows
-    are recorded, as is bit-identity of all three samplers' packed
-    incidence.  CPU wall times below (the kernel path runs
-    interpret-emulated); coin draws are identical across samplers by
-    construction, so their traffic cancels in the comparison.
+    The >= 8x state ratio and the resident layout's gather-traffic win
+    (gmask round-trip bytes / coin-plane bytes > 1) are asserted
+    (model-verified) before the rows are recorded, as is bit-identity
+    of all four samplers' packed incidence.  CPU wall times below (the
+    kernel paths run interpret-emulated); coin draws are identical
+    across samplers by construction, so their traffic cancels in the
+    comparison.
     """
     from repro.core.rrr import sample_incidence
     from repro.graphs import generators
@@ -305,21 +314,27 @@ def bench_sampler(fast: bool):
     fwd = padded_forward_adjacency(g)
     key = jax.random.key(11)
 
+    variants = {"dense": ("dense", "auto"),
+                "packed": ("packed", "auto"),
+                "kernel": ("kernel", "streamed"),
+                "kernel_resident": ("kernel", "resident")}
     outs = {}
     times = {}
-    for sampler in ("dense", "packed", "kernel"):
-        def run(nb, pb, wb, ky, s=sampler):
+    for name, (sampler, gather) in variants.items():
+        def run(nb, pb, wb, ky, s=sampler, gm=gather):
             return sample_incidence(nb, pb, wb, ky, theta=theta, n=n,
                                     model="IC", max_steps=steps,
-                                    sampler=s,
+                                    sampler=s, gather=gm,
                                     fwd=(None if s == "dense" else fwd))
-        outs[sampler] = run(nbr, prob, wt, key)
-        times[sampler] = timeit(run, nbr, prob, wt, key)
-    np.testing.assert_array_equal(np.asarray(outs["dense"]),
-                                  np.asarray(outs["packed"]))
-    np.testing.assert_array_equal(np.asarray(outs["dense"]),
-                                  np.asarray(outs["kernel"]))
+        outs[name] = run(nbr, prob, wt, key)
+        times[name] = timeit(run, nbr, prob, wt, key)
+    for name in ("packed", "kernel", "kernel_resident"):
+        np.testing.assert_array_equal(np.asarray(outs["dense"]),
+                                      np.asarray(outs[name]))
 
+    w = theta // 32
+    df = int(fwd[0].shape[1])                 # forward slots (out-degree)
+    d_pad = -(-int(nbr.shape[1]) // 32) * 32  # coin slots (default chunk)
     dense_state = steps * 4 * theta * n
     packed_state = steps * 4 * theta * n // 8
     epilogue = 2 * theta * n + theta * n // 8   # dense-only
@@ -327,6 +342,13 @@ def bench_sampler(fast: bool):
     packed_bytes = packed_state + theta * n // 8
     state_ratio = dense_state / packed_state
     assert state_ratio >= 8.0, state_ratio    # acceptance: model-verified
+    # gather-plane traffic: the streamed layout's XLA-side gmask
+    # materialization (write) + kernel re-read vs the resident layout's
+    # coin-plane read + int32 gidx stream, per step.
+    gmask_bytes = 2 * steps * n * df * w * 4          # eliminated
+    plane_bytes = steps * (n * d_pad * w + n * df) * 4
+    gather_ratio = gmask_bytes / plane_bytes
+    assert gather_ratio > 1.0, (gather_ratio, df, d_pad)  # acceptance
     record(f"rrr/sampler_dense/n={n},theta={theta},S={steps}",
            times["dense"] * 1e6,
            f"tpu_roofline_target_us={dense_bytes/HBM_BW*1e6:.2f} "
@@ -341,9 +363,19 @@ def bench_sampler(fast: bool):
            f"parity=dense-exact")
     record(f"rrr/sampler_kernel/n={n},theta={theta},S={steps}",
            times["kernel"] * 1e6,
-           f"tpu_roofline_target_us={packed_bytes/HBM_BW*1e6:.2f} "
+           f"tpu_roofline_target_us={(packed_bytes+gmask_bytes)/HBM_BW*1e6:.2f} "
            f"state_bytes={packed_state} "
            f"state_bytes_ratio={state_ratio:.1f}x "
+           f"gmask_roundtrip_bytes={gmask_bytes} "
+           f"launches_per_step=1 parity=dense-exact "
+           f"cpu_mode=interpret-emulation")
+    record(f"rrr/sampler_kernel_resident/n={n},theta={theta},S={steps}",
+           times["kernel_resident"] * 1e6,
+           f"tpu_roofline_target_us={(packed_bytes+plane_bytes)/HBM_BW*1e6:.2f} "
+           f"state_bytes={packed_state} "
+           f"gmask_bytes_eliminated={gmask_bytes} "
+           f"coin_plane_bytes={plane_bytes} "
+           f"gather_traffic_ratio={gather_ratio:.2f}x "
            f"launches_per_step=1 parity=dense-exact "
            f"cpu_mode=interpret-emulation")
 

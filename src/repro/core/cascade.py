@@ -142,10 +142,10 @@ def _lane_words(num_sims: int) -> jnp.ndarray:
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "model", "num_sims", "max_steps", "engine", "coin_chunk"))
+    "model", "num_sims", "max_steps", "engine", "coin_chunk", "gather"))
 def _simulate(nbr, prob, wt, fwd_nbr, fwd_rslot, smask, key, *,
               model: str, num_sims: int, max_steps: int, engine: str,
-              coin_chunk: int):
+              coin_chunk: int, gather: str = "auto"):
     """Core simulator over padded tables.
 
     nbr/prob/wt: padded reverse adjacency [n, d] (row v = in-edges).
@@ -188,9 +188,23 @@ def _simulate(nbr, prob, wt, fwd_nbr, fwd_rslot, smask, key, *,
     def expand(frontier, active, mask):
         """One diffusion step: gather over the reverse table.  The
         ``kernel`` engine fuses it into one pallas_call per step via
-        the sampler's expansion kernel (identical word algebra)."""
+        the sampler's expansion kernel (identical word algebra).
+        Cascade coins are drawn in place — mask[v, slot] already
+        belongs to v — so the resident layout's plane indices are the
+        identity ``v * d_pad + slot`` (no rev_slot cross-gather, no
+        zero-row sentinel needed: invalid slots hold zero mask words).
+        """
         if engine == "kernel":
             from repro.kernels import ops as kops
+            from repro.kernels import vmem_budget
+            mode = vmem_budget.resolve_gather(
+                gather, n=n, d_pad=d_pad, w=w)
+            if mode == "resident":
+                gidx = (jnp.arange(n, dtype=jnp.int32)[:, None] * d_pad
+                        + jnp.arange(d_pad, dtype=jnp.int32)[None, :])
+                return kops.rrr_expand_step_resident(
+                    frontier, active, tbl, gidx,
+                    mask.reshape(n * d_pad, w))
             return kops.rrr_expand_step(frontier, active, tbl, mask)
         hit = bitset.or_reduce(frontier[tbl] & mask, axis=1)
         new = hit & ~active
@@ -316,7 +330,8 @@ def _simulate_map(nbr, fwd_nbr, fwd_rslot, smask, key, *, model: str,
 def simulate_cascades(g: CSRGraph, seeds, key, *, model: Model = "IC",
                       num_sims: int = 64, max_steps: int = 64,
                       engine: str = "packed",
-                      coin_chunk: int = 32) -> jnp.ndarray:
+                      coin_chunk: int = 32,
+                      gather: str = "auto") -> jnp.ndarray:
     """Simulate ``num_sims`` cascades from ``seeds``; return the packed
     activation incidence uint32 [n, ceil(num_sims/32)] (bit s of word
     s//32 at row v ⇔ simulation s activated vertex v).
@@ -334,25 +349,28 @@ def simulate_cascades(g: CSRGraph, seeds, key, *, model: Model = "IC",
     return _simulate(nbr, prob, wt, fwd_nbr, fwd_rslot, smask, key,
                      model=model, num_sims=int(num_sims),
                      max_steps=int(max_steps), engine=engine,
-                     coin_chunk=int(coin_chunk))
+                     coin_chunk=int(coin_chunk), gather=gather)
 
 
 def cascade_counts(g: CSRGraph, seeds, key, *, model: Model = "IC",
                    num_sims: int = 64, max_steps: int = 64,
                    engine: str = "packed",
-                   coin_chunk: int = 32) -> jnp.ndarray:
+                   coin_chunk: int = 32,
+                   gather: str = "auto") -> jnp.ndarray:
     """Per-simulation activation counts int32 [num_sims] — the paired
     statistic the spread gate's z-test runs on."""
     words = simulate_cascades(g, seeds, key, model=model,
                               num_sims=num_sims, max_steps=max_steps,
-                              engine=engine, coin_chunk=coin_chunk)
+                              engine=engine, coin_chunk=coin_chunk,
+                              gather=gather)
     return jnp.sum(bitset.unpack_words(words, int(num_sims)),
                    axis=0).astype(jnp.int32)
 
 
 def spread(g: CSRGraph, seeds, key, *, model: Model = "IC",
            num_sims: int = 64, max_steps: int = 64,
-           engine: str = "packed", coin_chunk: int = 32) -> jnp.ndarray:
+           engine: str = "packed", coin_chunk: int = 32,
+           gather: str = "auto") -> jnp.ndarray:
     """Monte-Carlo estimate of sigma(seeds): mean activation count.
 
     Computed straight off the packed words (sum of popcounts / sims) —
@@ -361,6 +379,7 @@ def spread(g: CSRGraph, seeds, key, *, model: Model = "IC",
     """
     words = simulate_cascades(g, seeds, key, model=model,
                               num_sims=num_sims, max_steps=max_steps,
-                              engine=engine, coin_chunk=coin_chunk)
+                              engine=engine, coin_chunk=coin_chunk,
+                              gather=gather)
     total = jnp.sum(bitset.coverage_size(words))
     return total.astype(jnp.float32) / float(num_sims)

@@ -110,7 +110,8 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
                 chunk_size: int | str | None = None,
                 solver: str | None = None,
                 sampler: str | None = None, fwd=None,
-                coin_chunk: int = 32):
+                coin_chunk: int = 32, gather: str = "auto",
+                block_v: int | None = None):
     """Build the jittable distributed round fn(nbr, prob, wt, key).
 
     The graph (padded reverse adjacency [n_pad, d]) is replicated on
@@ -134,7 +135,7 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
     HBM->VMEM while chunk r inserts; without use_kernel each chunk is
     a ``lax.scan`` insertion step (legacy, bit-identical).  The
     string "auto" solves chunk_size from B, W, k and the ~16 MiB VMEM
-    budget (``repro.kernels.bucket_insert.auto_chunk_size``).
+    budget (``repro.kernels.vmem_budget.receiver_chunk_size``).
     Ignored under "pipeline", whose chunk is inherently the kk-seed
     ring payload (the ppermute of chunk r+1 overlaps the fused
     insertion of chunk r).
@@ -156,6 +157,14 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
     chunk index is folded into the PRNG stream, so the knob acts like
     a seed — any fixed value keeps the samplers bit-identical to each
     other, changing it changes the sampled sets.
+
+    gather: the kernel sampler's coin-gather layout — "resident" (the
+    per-step packed coin-plane stays VMEM-resident, BOTH gathers
+    in-kernel, no XLA-side [n, d_out, W] gmask), "streamed" (the
+    gmask-stream fallback), or "auto" (VMEM-budget solve; the
+    default).  block_v: the expansion kernel's row-tile size (None =
+    the ``kernels.vmem_budget`` policy).  Neither affects results —
+    ignored by the non-kernel samplers.
 
     shuffle:
       "dense"  — all_to_all of the packed incidence bitmatrix (paper-
@@ -179,12 +188,28 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
         raise ValueError(
             f"chunk_size must be a positive candidate count, None "
             f"(whole stream), or 'auto', got {chunk_size}")
+    if not isinstance(coin_chunk, int) or coin_chunk < 1:
+        raise ValueError(
+            f"coin_chunk must be a positive slot count (the IC "
+            f"coin-draw width; it is part of the PRNG stream, so pick "
+            f"one value and keep it), got {coin_chunk!r}")
+    if block_v is not None and (not isinstance(block_v, int)
+                                or block_v < 1):
+        raise ValueError(
+            f"block_v must be a positive row-tile size (rounded up to "
+            f"a multiple of 8 sublanes) or None for the autotuned/"
+            f"analytic policy, got {block_v!r}")
     # use_kernel=False is the bool's default (not "unset"), so only a
     # True value routes through the deprecated-alias path (and warns);
     # it keeps kernelizing the S4 receiver either way.
     solver = maxcover.resolve_solver(solver, use_kernel or None)
     from repro.core.rrr import (rrr_batch, rrr_batch_packed,
                                 resolve_sampler)
+    from repro.kernels import vmem_budget
+    if gather not in vmem_budget.GATHER_MODES:
+        # validate eagerly (the knob only binds inside the jitted
+        # round, which would surface the error at first trace)
+        vmem_budget.resolve_gather(gather, n=1, d_pad=1, w=1)
     sampler = resolve_sampler(sampler)
     if sampler != "dense":
         if fwd is None:
@@ -210,8 +235,8 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
         # the kernelized gather receiver — a single whole-stream chunk
         # would double-buffer the entire m*kk stream in VMEM, which at
         # production scale cannot fit (and buys no overlap at R=1).
-        from repro.kernels.bucket_insert import auto_chunk_size
-        chunk_size = auto_chunk_size(
+        from repro.kernels.vmem_budget import receiver_chunk_size
+        chunk_size = receiver_chunk_size(
             streaming.num_buckets(k, delta), w_global, k, total=m * kk)
     # sparse-shuffle bucket capacity: pairs per (src, dst) pair
     cap = max(64, int(2.0 * theta_local * est_rrr_len / m))
@@ -226,7 +251,8 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
         return rrr_batch_packed(nbr, prob, wt, fwd_nbr, fwd_rslot,
                                 roots, kb, model=model,
                                 max_steps=max_steps,
-                                coin_chunk=coin_chunk, expand=expand)
+                                coin_chunk=coin_chunk, expand=expand,
+                                gather=gather, block_v=block_v)
 
     def shard_fn(nbr, prob, wt, key):
         pid = lax.axis_index(axes)

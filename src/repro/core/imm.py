@@ -80,7 +80,8 @@ def imm(g: CSRGraph, k: int, eps: float, key, *, model: str = "IC",
         max_theta: int = 1 << 16, max_steps: int = 32,
         theta0: Optional[int] = None,
         solver: str = "scan", sampler: str = "dense",
-        coin_chunk: int = 32) -> IMMResult:
+        coin_chunk: int = 32, gather: str = "auto",
+        block_v: int | None = None) -> IMMResult:
     """Run IMM and return the final seed set.
 
     max_theta caps the sampling effort so huge lambda* values (tiny
@@ -122,7 +123,8 @@ def imm(g: CSRGraph, k: int, eps: float, key, *, model: str = "IC",
             inc = sample_incidence(
                 nbr, prob, wt, jax.random.fold_in(key, i), theta=add, n=n,
                 model=model, max_steps=max_steps, sampler=sampler,
-                fwd=fwd, coin_chunk=coin_chunk)
+                fwd=fwd, coin_chunk=coin_chunk,
+                gather=gather, block_v=block_v)
             rows = inc if rows is None else jnp.concatenate([rows, inc], 1)
             theta_cur = theta_i
         seeds, cov = selector(rows, k, jax.random.fold_in(k_sel, i))
@@ -138,7 +140,8 @@ def imm(g: CSRGraph, k: int, eps: float, key, *, model: str = "IC",
         inc = sample_incidence(
             nbr, prob, wt, jax.random.fold_in(key, 0x5EED), n=n,
             theta=theta - theta_cur, model=model, max_steps=max_steps,
-            sampler=sampler, fwd=fwd, coin_chunk=coin_chunk)
+            sampler=sampler, fwd=fwd, coin_chunk=coin_chunk,
+            gather=gather, block_v=block_v)
         rows = jnp.concatenate([rows, inc], axis=1)
         theta_cur = theta
     seeds, cov = selector(rows, k, jax.random.fold_in(k_sel, 0x5EED))

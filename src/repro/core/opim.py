@@ -76,7 +76,8 @@ def opim(g: CSRGraph, k: int, eps: float, key, *, model: str = "IC",
          theta0: int = 256, max_theta: int = 1 << 16, max_steps: int = 32,
          fail_prob: float = 1.0 / 128.0,
          solver: str = "scan", sampler: str = "dense",
-         coin_chunk: int = 32) -> OPIMResult:
+         coin_chunk: int = 32, gather: str = "auto",
+         block_v: int | None = None) -> OPIMResult:
     """OPIM-C driver.  ``solver_alpha`` is the worst-case approximation
     of the selector (used for the OPT upper bound); defaults to the
     greedy 1 - 1/e.  ``solver`` picks the max-k-cover path of the
@@ -106,12 +107,14 @@ def opim(g: CSRGraph, k: int, eps: float, key, *, model: str = "IC",
                                     jax.random.fold_in(key, 2 * i),
                                     theta=add, n=n, model=model,
                                     max_steps=max_steps, sampler=sampler,
-                                    fwd=fwd, coin_chunk=coin_chunk)
+                                    fwd=fwd, coin_chunk=coin_chunk,
+                                    gather=gather, block_v=block_v)
             inc2 = sample_incidence(nbr, prob, wt,
                                     jax.random.fold_in(key, 2 * i + 1),
                                     theta=add, n=n, model=model,
                                     max_steps=max_steps, sampler=sampler,
-                                    fwd=fwd, coin_chunk=coin_chunk)
+                                    fwd=fwd, coin_chunk=coin_chunk,
+                                    gather=gather, block_v=block_v)
             r1 = inc1 if r1 is None else jnp.concatenate([r1, inc1], 1)
             r2 = inc2 if r2 is None else jnp.concatenate([r2, inc2], 1)
             theta = new_theta

@@ -23,12 +23,21 @@ identical packed incidence), the ``sampler=`` analogue of the sender's
     transpose of the dense path disappear.
   * ``sampler="kernel"`` — the packed path with the hot expansion step
     fused into ONE Pallas launch per BFS step
-    (``repro.kernels.rrr_expand``): frontier/visited words stay
-    VMEM-resident while ``fwd_nbr`` index tiles and the pre-gathered
-    packed coin-mask tiles stream HBM→VMEM double-buffered; gather +
-    AND + OR-accumulate + the new/visited updates fuse so the gathered
-    ``[n, d_out, W]`` frontier intermediate never touches HBM.
-    Bit-exact to the packed JAX path (identical word algebra).
+    (``repro.kernels.rrr_expand``), in one of two gather layouts
+    (``gather=``, default ``"auto"`` — a VMEM-budget solve): with
+    ``"resident"`` the per-step packed coin-plane
+    (uint32 [n·d_pad, W]) stays VMEM-resident and only int32
+    ``(fwd_nbr, gidx)`` index tiles stream, so BOTH gathers (frontier
+    rows, coin words at ``rev_slot``) happen inside the kernel — the
+    XLA-side [n, d_out, W] gmask gather and its HBM round-trip never
+    exist; with ``"streamed"`` (the fallback when the coin-plane
+    exceeds VMEM) XLA pre-gathers the mask tiles and the kernel
+    streams (fwd_nbr, gmask) pairs double-buffered.  Either way
+    gather + AND + OR-accumulate + the new/visited updates fuse so
+    the gathered ``[n, d_out, W]`` frontier intermediate never
+    touches HBM, heavy-hub forward rows tile into the stream
+    (order-free OR), and both layouts are bit-exact to the packed
+    JAX path (identical word algebra).
 
 Each expansion re-draws edge coins; under IC an edge is examined
 exactly once (its source is in the frontier exactly once), so per-step
@@ -104,9 +113,11 @@ def _coin_chunks(d: int, coin_chunk: int) -> Tuple[int, int, int]:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("model", "max_steps", "sampler", "coin_chunk"))
+    jax.jit, static_argnames=("model", "max_steps", "sampler", "coin_chunk",
+                              "gather", "block_v"))
 def rrr_batch(nbr, prob, wt, roots, key, *, model: str, max_steps: int = 64,
-              sampler: str = "dense", fwd=None, coin_chunk: int = 32):
+              sampler: str = "dense", fwd=None, coin_chunk: int = 32,
+              gather: str = "auto", block_v: Optional[int] = None):
     """Generate one batch of RRR sets.
 
     Args:
@@ -130,7 +141,7 @@ def rrr_batch(nbr, prob, wt, roots, key, *, model: str, max_steps: int = 64,
         packed = _rrr_batch_packed(
             nbr, prob, wt, fwd_nbr, fwd_rslot, roots, key, model=model,
             max_steps=max_steps, coin_chunk=coin_chunk,
-            kernel=(sampler == "kernel"))
+            kernel=(sampler == "kernel"), gather=gather, block_v=block_v)
         return bitset.unpack_words(packed, roots.shape[0]).T
 
     n, d = nbr.shape
@@ -231,7 +242,8 @@ def _pack_batch_lane(fire, n: int, chunk: int, batch: int):
 
 
 def _expand_packed(frontier, visited, fwd_nbr, fwd_rslot, mask,
-                   kernel: bool):
+                   kernel: bool, gather: str = "auto",
+                   block_v: Optional[int] = None):
     """One packed BFS expansion: gather over the forward adjacency.
 
     frontier/visited: uint32 [n, W] packed state.
@@ -240,21 +252,38 @@ def _expand_packed(frontier, visited, fwd_nbr, fwd_rslot, mask,
       edge slot ``slot`` of v this step").
     Returns (new, visited | new).
 
-    The ``[n, d_out, W]`` pre-gathered mask ``gmask`` is built here in
-    XLA either way (it is per-step random data: drawn, packed, gathered
-    and consumed once); the ``kernel`` path then fuses the *frontier*
-    gather + AND + OR-accumulate + new/visited updates into one Pallas
-    launch so the gathered frontier intermediate and the hit/new
-    elementwise passes never round-trip HBM.
+    The ``kernel`` path fuses the expansion into one Pallas launch per
+    step.  Under ``gather="resident"`` the mask goes in whole as the
+    flat coin-plane [n * d_pad, W] and BOTH gathers (frontier rows at
+    ``fwd_nbr``, coin words at ``gidx = fwd_nbr * d_pad + rev_slot``)
+    happen inside the kernel — no [n, d_out, W] gmask is built
+    anywhere.  Under ``"streamed"`` (the fallback when the coin-plane
+    exceeds the VMEM budget; ``"auto"`` solves which) the gmask is
+    pre-gathered here in XLA and streamed tile-by-tile, with only the
+    frontier gather fused.  The JAX path mirrors the streamed layout.
     """
     valid = fwd_nbr >= 0
     nbr_c = jnp.where(valid, fwd_nbr, 0)
+    if kernel:
+        from repro.kernels import ops as kops
+        from repro.kernels import vmem_budget
+        n, d_pad, _ = mask.shape
+        mode = vmem_budget.resolve_gather(
+            gather, n=n, d_pad=d_pad, w=mask.shape[2], block_v=block_v)
+        if mode == "resident":
+            # invalid slots index the plane's guaranteed zero row
+            gidx = jnp.where(valid,
+                             nbr_c * d_pad + jnp.clip(fwd_rslot, 0),
+                             n * d_pad)
+            return kops.rrr_expand_step_resident(
+                frontier, visited, nbr_c, gidx,
+                mask.reshape(n * d_pad, -1), block_v=block_v)
     gmask = jnp.where(valid[:, :, None],
                       mask[nbr_c, jnp.clip(fwd_rslot, 0)],
                       jnp.uint32(0))                       # [n, df, W]
     if kernel:
-        from repro.kernels import ops as kops
-        return kops.rrr_expand_step(frontier, visited, nbr_c, gmask)
+        return kops.rrr_expand_step(frontier, visited, nbr_c, gmask,
+                                    block_v=block_v)
     hit = bitset.or_reduce(frontier[nbr_c] & gmask, axis=1)  # [n, W]
     new = hit & ~visited
     return new, visited | new
@@ -262,7 +291,8 @@ def _expand_packed(frontier, visited, fwd_nbr, fwd_rslot, mask,
 
 def _rrr_batch_packed(nbr, prob, wt, fwd_nbr, fwd_rslot, roots, key, *,
                       model: str, max_steps: int, coin_chunk: int,
-                      kernel: bool):
+                      kernel: bool, gather: str = "auto",
+                      block_v: Optional[int] = None):
     """The packed BFS engine shared by sampler="packed" and "kernel"."""
     n, d = nbr.shape
     batch = roots.shape[0]
@@ -319,7 +349,8 @@ def _rrr_batch_packed(nbr, prob, wt, fwd_nbr, fwd_rslot, roots, key, *,
         frontier, visited, k, step = state
         k, sub = jax.random.split(k)
         new, visited = _expand_packed(frontier, visited, fwd_nbr,
-                                      fwd_rslot, step_mask(sub), kernel)
+                                      fwd_rslot, step_mask(sub), kernel,
+                                      gather=gather, block_v=block_v)
         return new, visited, k, step + 1
 
     def cond(state):
@@ -332,10 +363,12 @@ def _rrr_batch_packed(nbr, prob, wt, fwd_nbr, fwd_rslot, roots, key, *,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("model", "max_steps", "coin_chunk", "expand"))
+    jax.jit, static_argnames=("model", "max_steps", "coin_chunk", "expand",
+                              "gather", "block_v"))
 def rrr_batch_packed(nbr, prob, wt, fwd_nbr, fwd_rslot, roots, key, *,
                      model: str, max_steps: int = 64, coin_chunk: int = 32,
-                     expand: str = "jax"):
+                     expand: str = "jax", gather: str = "auto",
+                     block_v: Optional[int] = None):
     """Packed-state RRR batch: word-packed incidence [n, W] directly.
 
     ``(fwd_nbr, fwd_rslot)`` is the padded forward adjacency
@@ -345,6 +378,10 @@ def rrr_batch_packed(nbr, prob, wt, fwd_nbr, fwd_rslot, roots, key, *,
     each other and to ``pack_bool_matrix(rrr_batch(...).T)`` of the
     dense path under the same key/coin_chunk.
 
+    ``gather``/``block_v`` shape the kernel engine only (resident vs
+    streamed coin gather, row-tile size — see the module docstring and
+    ``kernels.vmem_budget``); neither affects results.
+
     Returns: uint32 [n, ceil(batch/32)]; bit i of word i//32 at row v
     is set iff v in RRR(roots[i]).
     """
@@ -353,16 +390,19 @@ def rrr_batch_packed(nbr, prob, wt, fwd_nbr, fwd_rslot, roots, key, *,
     return _rrr_batch_packed(nbr, prob, wt, fwd_nbr, fwd_rslot, roots,
                              key, model=model, max_steps=max_steps,
                              coin_chunk=coin_chunk,
-                             kernel=(expand == "kernel"))
+                             kernel=(expand == "kernel"),
+                             gather=gather, block_v=block_v)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("theta", "model", "max_steps", "n",
-                                    "sampler", "coin_chunk"))
+                                    "sampler", "coin_chunk", "gather",
+                                    "block_v"))
 def sample_incidence(nbr, prob, wt, key, *, theta: int, n: int,
                      model: str, max_steps: int = 64,
                      sampler: str = "dense", fwd=None,
-                     coin_chunk: int = 32):
+                     coin_chunk: int = 32, gather: str = "auto",
+                     block_v: Optional[int] = None):
     """Sample ``theta`` RRR sets, return packed incidence X [n, W].
 
     Bit i of X[v] is set iff v is in RRR sample i.  theta must be a
@@ -387,12 +427,15 @@ def sample_incidence(nbr, prob, wt, key, *, theta: int, n: int,
     return rrr_batch_packed(
         nbr, prob, wt, fwd_nbr, fwd_rslot, roots, kb, model=model,
         max_steps=max_steps, coin_chunk=coin_chunk,
-        expand=("kernel" if sampler == "kernel" else "jax"))
+        expand=("kernel" if sampler == "kernel" else "jax"),
+        gather=gather, block_v=block_v)
 
 
 def sample_incidence_host(g: CSRGraph, theta: int, key, model: Model = "IC",
                           max_steps: int = 64, batch: int = 256,
-                          sampler: str = "dense", coin_chunk: int = 32):
+                          sampler: str = "dense", coin_chunk: int = 32,
+                          gather: str = "auto",
+                          block_v: Optional[int] = None):
     """Host-side convenience: batch over theta to bound peak memory.
 
     ``theta`` is rounded up to a whole number of 32-bit words and the
@@ -417,7 +460,8 @@ def sample_incidence_host(g: CSRGraph, theta: int, key, model: Model = "IC",
         chunks.append(sample_incidence(nbr, prob, wt, sub, theta=b, n=n,
                                        model=model, max_steps=max_steps,
                                        sampler=sampler, fwd=fwd,
-                                       coin_chunk=coin_chunk))
+                                       coin_chunk=coin_chunk,
+                                       gather=gather, block_v=block_v))
         done += b
         i += 1
     x = jnp.concatenate(chunks, axis=1)[:, :bitset.num_words(theta)]

@@ -248,8 +248,8 @@ def streaming_maxcover(seed_ids: jnp.ndarray, rows: jnp.ndarray, k: int,
         # kernel an empty grid.
         pass
     elif receiver == "pipelined":
-        from repro.kernels import bucket_insert
-        cs = min(chunk_size or bucket_insert.auto_chunk_size(
+        from repro.kernels import vmem_budget
+        cs = min(chunk_size or vmem_budget.receiver_chunk_size(
             state.covers.shape[0], rows.shape[1], k, total), total)
         ids_ch, rows_ch = chunk_stream(seed_ids, rows, cs)
         state = insert_stream(state, ids_ch, rows_ch, k)

@@ -56,46 +56,15 @@ from repro.kernels import gain_core
 
 BLOCK_W = 512
 
-# Per-core VMEM the auto chunk policy budgets against (v5e ~16 MiB,
-# minus headroom for Mosaic's own spills and the scalar blocks).
-VMEM_BUDGET_BYTES = 14 * (1 << 20)
-_WORD_BYTES = 4
+# The chunk-size VMEM solve lives in ``kernels.vmem_budget``
+# (``receiver_chunk_size``) — the single budget model shared with the
+# sampler/sender tile solves and the autotuner.
 
 
 def _padded_w(w: int, block_w: int = BLOCK_W) -> tuple[int, int]:
     """(effective block_w, W padded up to a whole number of blocks)."""
     bw = gain_core.effective_block(w, block_w, gain_core.LANE)
     return bw, gain_core.padded_size(w, bw)
-
-
-def auto_chunk_size(num_buckets: int, num_words: int, k: int,
-                    total: int | None = None,
-                    vmem_budget_bytes: int = VMEM_BUDGET_BYTES,
-                    block_w: int = BLOCK_W) -> int:
-    """Solve the pipelined kernel's chunk size C from the VMEM budget.
-
-    Resident bytes for a [R, C, W] stream through B buckets of
-    capacity k:
-
-      covers in+out   2 * B * Wp          (Wp = W padded to block_w)
-      seeds  in+out   2 * B * k
-      counts/thr      ~4 * B
-      rows double-buf 2 * C * Wp          (the solved-for term)
-
-    Returns the largest C (multiple of 8 sublanes, >= 8) whose
-    double-buffer fits the remaining budget; ``total`` (the stream
-    length m*kk) caps C so a short stream is not over-chunked.
-    """
-    bw, wp = _padded_w(num_words, block_w)
-    state_bytes = _WORD_BYTES * (2 * num_buckets * wp
-                                 + 2 * num_buckets * k
-                                 + 4 * num_buckets)
-    avail = max(0, vmem_budget_bytes - state_bytes)
-    c = avail // (2 * wp * _WORD_BYTES)
-    c = max(8, (c // 8) * 8)
-    if total is not None and total > 0:
-        c = min(c, max(8, -(-total // 8) * 8))
-    return int(c)
 
 
 def _insert_candidates(read_id, read_row_tile, c_total, covers_ref,

@@ -184,7 +184,7 @@ def _kernel(rows_hbm, excl_ref, seeds_ref, rows_out_ref, covered_ref,
 @functools.partial(jax.jit, static_argnames=("k", "block_v", "interpret"))
 def greedy_maxcover_resident_pallas(rows: jnp.ndarray, k: int,
                                     excluded: jnp.ndarray | None = None,
-                                    block_v: int = BLOCK_V,
+                                    block_v: int | None = None,
                                     interpret: bool = False):
     """Resident greedy max-k-cover: rows uint32 [n, W] ->
     (seeds int32 [k], sel_rows uint32 [k, W], covered uint32 [W],
@@ -210,6 +210,9 @@ def greedy_maxcover_resident_pallas(rows: jnp.ndarray, k: int,
     if excluded is None:
         excluded = jnp.full((1,), -1, jnp.int32)
     excl = jnp.asarray(excluded, jnp.int32).reshape(1, -1)
+    if block_v is None:   # tuned table (falls back to BLOCK_V)
+        from repro.kernels import vmem_budget
+        block_v = vmem_budget.auto_block_v("greedy_pick", BLOCK_V)
     bv = gain_core.effective_block(
         n, block_v, gain_core.SUBLANE)
     bv = gain_core.padded_size(bv, gain_core.SUBLANE)

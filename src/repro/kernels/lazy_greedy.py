@@ -87,9 +87,14 @@ BLOCK_V = 128
 _UB_INIT = jnp.iinfo(jnp.int32).max
 
 
-def num_row_tiles(n: int, block_v: int = BLOCK_V) -> int:
+def num_row_tiles(n: int, block_v: int | None = None) -> int:
     """Number of row tiles the lazy kernel sweeps per full pass — the
-    denominator of the skip ratio (total sweeps possible = k * tiles)."""
+    denominator of the skip ratio (total sweeps possible = k * tiles).
+    ``block_v=None`` resolves exactly like the kernel wrapper (tuned
+    table, then BLOCK_V) so external ratio math stays consistent."""
+    if block_v is None:
+        from repro.kernels import vmem_budget
+        block_v = vmem_budget.auto_block_v("lazy_greedy", BLOCK_V)
     bv = gain_core.effective_block(n, block_v, gain_core.SUBLANE)
     bv = gain_core.padded_size(bv, gain_core.SUBLANE)
     return gain_core.padded_size(n, bv) // bv
@@ -212,7 +217,7 @@ def _kernel(rows_hbm, excl_ref, seeds_ref, rows_out_ref, covered_ref,
 @functools.partial(jax.jit, static_argnames=("k", "block_v", "interpret"))
 def greedy_maxcover_lazy_pallas(rows: jnp.ndarray, k: int,
                                 excluded: jnp.ndarray | None = None,
-                                block_v: int = BLOCK_V,
+                                block_v: int | None = None,
                                 interpret: bool = False):
     """Lazy-greedy resident max-k-cover: rows uint32 [n, W] ->
     (seeds int32 [k], sel_rows uint32 [k, W], covered uint32 [W],
@@ -239,6 +244,9 @@ def greedy_maxcover_lazy_pallas(rows: jnp.ndarray, k: int,
     if excluded is None:
         excluded = jnp.full((1,), -1, jnp.int32)
     excl = jnp.asarray(excluded, jnp.int32).reshape(1, -1)
+    if block_v is None:   # tuned table (falls back to BLOCK_V)
+        from repro.kernels import vmem_budget
+        block_v = vmem_budget.auto_block_v("lazy_greedy", BLOCK_V)
     bv = gain_core.effective_block(n, block_v, gain_core.SUBLANE)
     bv = gain_core.padded_size(bv, gain_core.SUBLANE)
     n_pad = gain_core.padded_size(n, bv)

@@ -17,7 +17,8 @@ from repro.kernels.bucket_insert import (bucket_insert_chunk_pallas,
 from repro.kernels.coverage import marginal_gain_pallas
 from repro.kernels.greedy_pick import greedy_maxcover_resident_pallas
 from repro.kernels.lazy_greedy import greedy_maxcover_lazy_pallas
-from repro.kernels.rrr_expand import rrr_expand_step_pallas
+from repro.kernels.rrr_expand import (rrr_expand_step_pallas,
+                                      rrr_expand_step_resident_pallas)
 from repro.kernels.topk_gain import best_gain_index_pallas
 
 
@@ -91,11 +92,14 @@ def greedy_maxcover_lazy_batch(rows: jnp.ndarray, k: int,
 
 
 def rrr_expand_step(frontier: jnp.ndarray, visited: jnp.ndarray,
-                    fwd_nbr: jnp.ndarray, gmask: jnp.ndarray):
-    """Fused packed BFS expansion step: frontier/visited words
-    VMEM-resident, index and packed coin-mask tiles streamed
-    double-buffered, gather + AND + OR-accumulate + new/visited
-    updates in ONE pallas_call per step.
+                    fwd_nbr: jnp.ndarray, gmask: jnp.ndarray,
+                    block_v: int | None = None):
+    """Fused packed BFS expansion step, streamed-gmask layout:
+    frontier/visited words VMEM-resident, index and pre-gathered
+    packed coin-mask tiles streamed double-buffered (the forward-slot
+    axis tiled into the stream whenever the double buffer would
+    overflow the VMEM budget), gather + AND + OR-accumulate +
+    new/visited updates in ONE pallas_call per step.
 
     The kernel is direction-agnostic — it just gathers frontier words
     through an index table under a packed mask — so it serves both the
@@ -104,7 +108,25 @@ def rrr_expand_step(frontier: jnp.ndarray, visited: jnp.ndarray,
     cascade simulator's forward diffusion (``engine="kernel"`` in
     ``core/cascade``: table = reverse adjacency, coins local)."""
     return rrr_expand_step_pallas(frontier, visited, fwd_nbr, gmask,
+                                  block_v=block_v,
                                   interpret=_interpret())
+
+
+def rrr_expand_step_resident(frontier: jnp.ndarray, visited: jnp.ndarray,
+                             fwd_nbr: jnp.ndarray, gidx: jnp.ndarray,
+                             plane: jnp.ndarray,
+                             block_v: int | None = None):
+    """Fused packed BFS expansion step, resident coin-plane layout
+    (``gather="resident"``): the per-step packed coin-plane
+    (uint32 [rows, W]) stays VMEM-resident and only int32
+    ``(fwd_nbr, gidx)`` index tiles stream — BOTH gathers happen
+    inside the kernel, so the XLA-side [n, d_out, W] gmask and its HBM
+    round-trip never exist.  Bit-identical to
+    :func:`rrr_expand_step` for ``gidx = fwd_nbr * d_pad + rev_slot``
+    (invalid slots pointed at the guaranteed zero row ``rows``)."""
+    return rrr_expand_step_resident_pallas(frontier, visited, fwd_nbr,
+                                           gidx, plane, block_v=block_v,
+                                           interpret=_interpret())
 
 
 def bucket_insert_chunk(seed_ids: jnp.ndarray, rows: jnp.ndarray,

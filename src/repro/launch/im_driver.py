@@ -25,6 +25,64 @@ from repro.graphs.csr import padded_adjacency, padded_forward_adjacency
 from repro.launch.mesh import make_host_mesh
 
 
+def _coin_chunk_arg(text: str) -> int:
+    """--coin-chunk validator: fail at the CLI boundary with an
+    actionable message instead of a deep ValueError out of
+    ``rrr._coin_chunks`` mid-trace."""
+    try:
+        v = int(text)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"expected an integer slot count, got {text!r} (the IC "
+            "coin-draw width, e.g. 32)")
+    if v < 1:
+        raise argparse.ArgumentTypeError(
+            f"must be >= 1, got {v} — coin-chunk is the number of "
+            "adjacency slots each coin draw covers (it is part of the "
+            "PRNG stream: pick one value, e.g. 32, and keep it)")
+    return v
+
+
+def _chunk_size_arg(text: str):
+    """--chunk-size validator: 'auto', 0 (default policy), or a
+    positive candidate count."""
+    if text == "auto":
+        return "auto"
+    try:
+        v = int(text)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"expected 'auto' or an integer candidate count, got "
+            f"{text!r} (e.g. --chunk-size auto, --chunk-size 256, or "
+            "0 for the default policy)")
+    if v < 0:
+        raise argparse.ArgumentTypeError(
+            f"must be >= 0, got {v} — a positive candidate count, 0 "
+            "for the default policy, or 'auto' for the VMEM-budget "
+            "solve")
+    return v or None
+
+
+def _block_v_arg(text: str):
+    """--block-v validator: 'auto' (tuned table / analytic policy) or
+    a positive row-tile size."""
+    if text == "auto":
+        return None
+    try:
+        v = int(text)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"expected 'auto' or an integer row-tile size, got "
+            f"{text!r} (e.g. --block-v 128)")
+    if v < 1:
+        raise argparse.ArgumentTypeError(
+            f"must be >= 1, got {v} — the kernel row-tile size is "
+            "rounded up to a multiple of 8 sublanes; 'auto' consults "
+            "the tuned table (benchmarks/tuned/) before the analytic "
+            "solve")
+    return v
+
+
 def make_graph(kind: str, n: int, avg_deg: float, seed: int):
     if kind == "er":
         return generators.erdos_renyi(n, avg_deg, seed)
@@ -75,7 +133,24 @@ def main(argv=None):
                          "adjacency), or 'kernel' (packed plus ONE "
                          "fused Pallas launch per BFS step); all "
                          "three bit-identical for the same seed")
-    ap.add_argument("--coin-chunk", type=int, default=32,
+    ap.add_argument("--gather", default="auto",
+                    choices=("resident", "streamed", "auto"),
+                    help="kernel-sampler coin-gather layout: "
+                         "'resident' keeps the per-step packed "
+                         "coin-plane VMEM-resident and gathers BOTH "
+                         "fwd_nbr and rev_slot inside the kernel (no "
+                         "XLA-side [n, d_out, W] gmask, no HBM "
+                         "round-trip), 'streamed' streams pre-gathered "
+                         "gmask tiles (the fallback when the plane "
+                         "exceeds VMEM), 'auto' solves from the VMEM "
+                         "budget; bit-identical either way (ignored "
+                         "by --sampler dense/packed)")
+    ap.add_argument("--block-v", type=_block_v_arg, default=None,
+                    help="sampler-kernel row-tile size, or 'auto' "
+                         "(default: tuned table from 'python -m "
+                         "benchmarks.autotune', then the analytic "
+                         "VMEM solve); never affects results")
+    ap.add_argument("--coin-chunk", type=_coin_chunk_arg, default=32,
                     help="IC coin-draw slot width inside the sampler "
                          "BFS (bounds the bool coin intermediate to "
                          "~batch*n*chunk; the packed samplers also "
@@ -86,7 +161,7 @@ def main(argv=None):
                     help="DEPRECATED: maps to --solver fused and "
                          "additionally routes the receiver through the "
                          "fused/pipelined insertion Pallas kernels")
-    ap.add_argument("--chunk-size", default="0",
+    ap.add_argument("--chunk-size", type=_chunk_size_arg, default="0",
                     help="receiver insertion chunk: a candidate count "
                          "(>= the stream length forces one whole-stream "
                          "chunk), 'auto' = solve from the VMEM budget, "
@@ -123,8 +198,7 @@ def main(argv=None):
             "--sampler", args.sampler, "--k-max", str(args.k),
             "--max-theta", str(args.max_theta),
             "--seed", str(args.seed), "--check"])
-    chunk_size = (args.chunk_size if args.chunk_size == "auto"
-                  else int(args.chunk_size) or None)
+    chunk_size = args.chunk_size   # validated by _chunk_size_arg
     if args.use_kernel:
         warnings.warn(
             "--use-kernel is deprecated: it maps to --solver fused "
@@ -154,7 +228,8 @@ def main(argv=None):
             delta=args.delta, alpha_trunc=alpha, aggregate=args.aggregate,
             use_kernel=args.use_kernel, solver=solver,
             chunk_size=chunk_size, sampler=args.sampler, fwd=fwd,
-            coin_chunk=args.coin_chunk)
+            coin_chunk=args.coin_chunk, gather=args.gather,
+            block_v=args.block_v)
         out = jax.jit(fn)(nbr, prob, wt, key)
         seeds = np.asarray(out.seeds)
         print(f"[im] m={m} theta={theta} coverage={int(out.coverage)} "
@@ -178,7 +253,8 @@ def main(argv=None):
             res = opim.opim(g, args.k, args.eps, key, model=args.model,
                             selector=sel, max_theta=args.max_theta,
                             sampler=args.sampler,
-                            coin_chunk=args.coin_chunk)
+                            coin_chunk=args.coin_chunk,
+                            gather=args.gather, block_v=args.block_v)
             seeds = res.seeds
             print(f"[im] OPIM rounds={res.rounds} theta={res.theta} "
                   f"guarantee={res.guarantee:.3f} "
@@ -187,7 +263,8 @@ def main(argv=None):
             res = imm.imm(g, args.k, args.eps, key, model=args.model,
                           selector=sel, max_theta=args.max_theta,
                           sampler=args.sampler,
-                          coin_chunk=args.coin_chunk)
+                          coin_chunk=args.coin_chunk,
+                          gather=args.gather, block_v=args.block_v)
             seeds = res.seeds
             print(f"[im] IMM rounds={res.rounds} theta={res.theta} "
                   f"coverage_frac={res.coverage_fraction:.4f}")

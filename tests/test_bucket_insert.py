@@ -9,9 +9,9 @@ import pytest
 
 from repro.core import streaming
 from repro.kernels import ref
-from repro.kernels.bucket_insert import (auto_chunk_size,
-                                         bucket_insert_chunk_pallas,
+from repro.kernels.bucket_insert import (bucket_insert_chunk_pallas,
                                          bucket_insert_stream_pallas)
+from repro.kernels.vmem_budget import receiver_chunk_size
 
 # (B, W, C, k) — W deliberately includes non-tile-aligned word counts.
 SHAPES = [
@@ -267,14 +267,14 @@ def test_auto_chunk_size_policy():
     """The VMEM-budget solve: multiple-of-8 floors, monotone shrink as
     W grows, capped by the stream length, floor of 8 when the resident
     state alone exhausts the budget."""
-    c = auto_chunk_size(63, 2048, 32)
+    c = receiver_chunk_size(63, 2048, 32)
     assert c >= 8 and c % 8 == 0
-    assert auto_chunk_size(63, 8192, 32) <= c
-    assert auto_chunk_size(63, 2048, 32, total=64) <= 64
-    assert auto_chunk_size(63, 100000, 100) == 8
+    assert receiver_chunk_size(63, 8192, 32) <= c
+    assert receiver_chunk_size(63, 2048, 32, total=64) <= 64
+    assert receiver_chunk_size(63, 100000, 100) == 8
     # double-buffer + resident state fit the budget at the solved C
-    from repro.kernels.bucket_insert import (VMEM_BUDGET_BYTES,
-                                             _padded_w)
+    from repro.kernels.bucket_insert import _padded_w
+    from repro.kernels.vmem_budget import VMEM_BUDGET_BYTES
     _, wp = _padded_w(2048)
     resident = 4 * (2 * 63 * wp + 2 * 63 * 32 + 4 * 63)
     assert resident + 2 * c * wp * 4 <= VMEM_BUDGET_BYTES

@@ -266,3 +266,60 @@ def test_kernel_engine_step_is_one_pallas_call():
     assert trace("kernel").count("pallas_call") == 1
     assert trace("packed").count("pallas_call") == 0
     assert trace("map").count("pallas_call") == 0
+
+
+# ---------------------------------------------------------------------
+# Gather layouts (streamed gmask vs VMEM-resident coin-plane)
+# ---------------------------------------------------------------------
+
+def _hub_graph(n=80, seed=4):
+    """Vertex 0 points at everyone over a sparse background — hub-sized
+    d_out with small in-degrees (the kernel's worst-case stream)."""
+    rng = np.random.default_rng(seed)
+    src = [np.zeros(n - 1, dtype=np.int64)]
+    dst = [np.arange(1, n, dtype=np.int64)]
+    bs, bd = rng.integers(1, n, 3 * n), rng.integers(1, n, 3 * n)
+    keep = bs != bd
+    return from_edge_list(np.concatenate([src[0], bs[keep]]),
+                          np.concatenate([dst[0], bd[keep]]), n,
+                          seed=seed)
+
+
+@pytest.mark.parametrize("model", ["IC", "LT", "WC"])
+@pytest.mark.parametrize("gather", ["resident", "streamed", "auto"])
+def test_kernel_engine_gather_modes_bit_identical(model, gather):
+    """Both in-kernel gather layouts (and the budget-solved auto) match
+    the map reference bit-for-bit on a heavy-hub graph, under a VMEM
+    budget small enough to force d_out tiling (env override)."""
+    import os
+    g = _hub_graph()
+    seeds = np.array([0, 3, 7])
+    key = jax.random.key(21)
+    kw = dict(model=model, num_sims=64, max_steps=12)
+    want = cascade.simulate_cascades(g, seeds, key, engine="map", **kw)
+    old = os.environ.get("REPRO_VMEM_BUDGET_BYTES")
+    os.environ["REPRO_VMEM_BUDGET_BYTES"] = str(1 << 16)
+    try:
+        got = cascade.simulate_cascades(g, seeds, key, engine="kernel",
+                                        gather=gather, **kw)
+    finally:
+        if old is None:
+            os.environ.pop("REPRO_VMEM_BUDGET_BYTES", None)
+        else:
+            os.environ["REPRO_VMEM_BUDGET_BYTES"] = old
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_kernel_engine_resident_is_one_pallas_call():
+    """The resident gather keeps the one-launch-per-step pin."""
+    g = _hub_graph()
+    seeds = np.array([0, 1])
+
+    def trace(gather):
+        return str(jax.make_jaxpr(
+            lambda k: cascade.simulate_cascades(
+                g, seeds, k, model="IC", num_sims=32, max_steps=4,
+                engine="kernel", gather=gather))(jax.random.key(0)))
+
+    assert trace("resident").count("pallas_call") == 1
+    assert trace("streamed").count("pallas_call") == 1

@@ -140,15 +140,19 @@ def test_lazy_skips_tiles_on_skewed_gains():
     rows = bitset.pack_bool_matrix(jnp.asarray(dense))
 
     want = maxcover.greedy_maxcover(rows, k, solver="scan")
-    seeds, sel_rows, covered, gains, swept = ops.greedy_maxcover_lazy(
-        rows, k)
+    # block_v pinned: the skip claim needs a multi-tile launch, and
+    # block_v=None would consult the tuned table (which may legally
+    # prefer a tile size that makes this input single-tile).
+    seeds, sel_rows, covered, gains, swept = \
+        lazy_greedy.greedy_maxcover_lazy_pallas(
+            rows, k, block_v=128, interpret=True)
     np.testing.assert_array_equal(np.asarray(seeds),
                                   np.asarray(want.seeds))
     np.testing.assert_array_equal(np.asarray(gains),
                                   np.asarray(want.gains))
     np.testing.assert_array_equal(np.asarray(covered),
                                   np.asarray(want.covered))
-    num_tiles = lazy_greedy.num_row_tiles(n)
+    num_tiles = lazy_greedy.num_row_tiles(n, block_v=128)
     assert num_tiles >= 4          # the skew claim needs >1 tile
     assert int(swept) >= num_tiles  # pick 1 always sweeps everything
     assert int(swept) < k * num_tiles, (int(swept), k * num_tiles)

@@ -3,9 +3,19 @@
 Acceptance criteria pinned here:
   * the kernel step is bit-identical to the packed JAX expansion
     (gather + AND + OR-reduce + AND-NOT + OR) across non-tile-aligned
-    n / W, arbitrary forward degrees, and block_v choices;
+    n / W, arbitrary forward degrees, block_v choices, and forced
+    d_out tilings (d_tile / tiny VMEM budgets) — in BOTH gather
+    layouts (streamed gmask and VMEM-resident coin-plane);
   * sampler="kernel" compiles to exactly ONE pallas_call per BFS step
-    (jaxpr assertion); "packed" and "dense" to zero.
+    (jaxpr assertion); "packed" and "dense" to zero;
+  * gather="resident" eliminates the XLA-side [n, d_out, W] gmask
+    intermediate from the jaxpr (the HBM round-trip the in-kernel
+    rev_slot gather exists to kill), asserted on a heavy-hub fixture
+    whose d_out differs from the coin-plane slot count;
+  * a heavy-hub graph whose streamed scratch exceeds the VMEM budget
+    still samples bit-identically to the dense reference on every
+    sampler x gather combination (the budget solve tiles d_out
+    instead of overflowing).
 """
 import jax
 import jax.numpy as jnp
@@ -13,7 +23,8 @@ import numpy as np
 import pytest
 
 from repro.core import bitset
-from repro.kernels.rrr_expand import rrr_expand_step_pallas
+from repro.kernels.rrr_expand import (rrr_expand_step_pallas,
+                                      rrr_expand_step_resident_pallas)
 
 # Non-tile-aligned vertex/word counts on purpose (the kernel pads to
 # 8-sublane x 128-lane tiles internally).
@@ -88,6 +99,165 @@ def test_expand_kernel_empty_forward_adjacency():
     np.testing.assert_array_equal(np.asarray(vis), np.asarray(visited))
 
 
+def _random_resident_step(n, df, w, seed, rows=None):
+    """Resident-layout fixture: a [R, w] coin plane + a [n, df] gidx
+    table (R = the sentinel value for invalid slots; the wrapper
+    guarantees a zero row there)."""
+    rng = np.random.default_rng(seed)
+    rows = rows if rows is not None else n * 2 + 3
+    frontier = jnp.asarray(rng.integers(0, 2**32, (n, w), dtype=np.uint32)
+                           & rng.integers(0, 2**32, (n, w),
+                                          dtype=np.uint32))
+    visited = frontier | jnp.asarray(
+        rng.integers(0, 2**32, (n, w), dtype=np.uint32)
+        & rng.integers(0, 2**32, (n, w), dtype=np.uint32))
+    nbr = jnp.asarray(rng.integers(0, n, (n, df)), dtype=jnp.int32)
+    plane = jnp.asarray(rng.integers(0, 2**32, (rows, w), dtype=np.uint32)
+                        & rng.integers(0, 2**32, (rows, w),
+                                       dtype=np.uint32))
+    gidx = jnp.asarray(rng.integers(0, rows, (n, df)), dtype=jnp.int32)
+    # some slots point at the zero-sentinel row (padded adjacency)
+    pad = jnp.asarray(rng.random((n, df)) < 0.2)
+    gidx = jnp.where(pad, rows, gidx)
+    return frontier, visited, nbr, gidx, plane
+
+
+def _expand_resident_ref(frontier, visited, nbr, gidx, plane):
+    plane_ext = jnp.vstack([plane, jnp.zeros((1, plane.shape[1]),
+                                             plane.dtype)])
+    hit = bitset.or_reduce(frontier[nbr] & plane_ext[gidx], axis=1)
+    new = hit & ~visited
+    return new, visited | new
+
+
+@pytest.mark.parametrize("n,df,w", SHAPES)
+def test_expand_resident_kernel_matches_jax(n, df, w):
+    args = _random_resident_step(n, df, w, seed=n + w)
+    want_new, want_vis = _expand_resident_ref(*args)
+    got_new, got_vis = rrr_expand_step_resident_pallas(*args,
+                                                       interpret=True)
+    np.testing.assert_array_equal(np.asarray(want_new),
+                                  np.asarray(got_new))
+    np.testing.assert_array_equal(np.asarray(want_vis),
+                                  np.asarray(got_vis))
+
+
+@pytest.mark.parametrize("kernel_fn,fixture,ref", [
+    (rrr_expand_step_pallas, _random_step, _expand_ref),
+    (rrr_expand_step_resident_pallas, _random_resident_step,
+     _expand_resident_ref),
+], ids=["streamed", "resident"])
+@pytest.mark.parametrize("d_tile", (1, 2, 5, None))
+def test_expand_kernel_d_tiling_bit_exact(kernel_fn, fixture, ref,
+                                          d_tile):
+    """Explicit d_tile choices (incl. d_tile=1, the heavy-hub floor,
+    and d_tile=5 which does not divide d_out=12 so the ragged tail
+    tile is zero-padded) never change results — OR accumulation over
+    forward-slot tiles is order-free."""
+    args = fixture(64, 12, 2, seed=9)
+    want_new, want_vis = ref(*args)
+    got_new, got_vis = kernel_fn(*args, d_tile=d_tile, interpret=True)
+    np.testing.assert_array_equal(np.asarray(want_new),
+                                  np.asarray(got_new))
+    np.testing.assert_array_equal(np.asarray(want_vis),
+                                  np.asarray(got_vis))
+
+
+@pytest.mark.parametrize("kernel_fn,fixture,ref", [
+    (rrr_expand_step_pallas, _random_step, _expand_ref),
+    (rrr_expand_step_resident_pallas, _random_resident_step,
+     _expand_resident_ref),
+], ids=["streamed", "resident"])
+def test_expand_kernel_forced_budget_tiling(kernel_fn, fixture, ref):
+    """A VMEM budget far below the fixture's full-width scratch forces
+    the analytic solve into multi-tile d_out streaming (asserted, not
+    assumed) — outputs stay bit-identical."""
+    from repro.kernels import vmem_budget
+    n, df, w = 48, 16, 3
+    args = fixture(n, df, w, seed=11)
+    budget = 1 << 16    # 64 KiB: well under the one-tile scratch
+    bv, n_pad, wp = vmem_budget._sampler_geometry(n, w, 8)
+    resident = kernel_fn is rrr_expand_step_resident_pallas
+    plane_rows = (int(args[4].shape[0]) + 8 if resident else 0)
+    dt = vmem_budget.sampler_d_tile(df, w, block_v=bv, n_pad=n_pad,
+                                    resident=resident,
+                                    plane_rows=plane_rows,
+                                    vmem_budget_bytes=budget)
+    assert dt < df, dt    # the budget actually forces tiling
+    want_new, want_vis = ref(*args)
+    got_new, got_vis = kernel_fn(*args, block_v=8,
+                                 vmem_budget_bytes=budget,
+                                 interpret=True)
+    np.testing.assert_array_equal(np.asarray(want_new),
+                                  np.asarray(got_new))
+    np.testing.assert_array_equal(np.asarray(want_vis),
+                                  np.asarray(got_vis))
+
+
+# --------------------------------------------------------- heavy hub
+def _heavy_hub_graph(n=96, seed=0):
+    """Vertex 0 points at everyone (out-degree n-1) over a sparse
+    random background — d_out_max is hub-sized while in-degrees (the
+    coin-plane slot count) stay small, so the forward width and the
+    coin width genuinely differ."""
+    from repro.graphs.csr import from_edge_list
+    rng = np.random.default_rng(seed)
+    src = [np.zeros(n - 1, dtype=np.int64)]
+    dst = [np.arange(1, n, dtype=np.int64)]
+    m = 3 * n
+    bs = rng.integers(1, n, m)
+    bd = rng.integers(1, n, m)
+    keep = bs != bd
+    src.append(bs[keep])
+    dst.append(bd[keep])
+    return from_edge_list(np.concatenate(src), np.concatenate(dst), n,
+                          seed=seed)
+
+
+@pytest.mark.parametrize("gather", ("resident", "streamed", "auto"))
+def test_heavy_hub_sampler_bit_exact_under_tiny_budget(gather,
+                                                       monkeypatch):
+    """End-to-end sampling on the hub graph with the process-wide VMEM
+    budget forced far below the hub's full-width scratch: the solve
+    tiles d_out (asserted) and every kernel gather mode still matches
+    the dense reference bit-for-bit."""
+    from repro.core.rrr import sample_incidence
+    from repro.graphs.csr import padded_adjacency, padded_forward_adjacency
+    from repro.kernels import vmem_budget
+
+    g = _heavy_hub_graph()
+    n = g.num_vertices
+    nbr, prob, wt = padded_adjacency(g)
+    fwd = padded_forward_adjacency(g)
+    df = int(fwd[0].shape[1])
+    key = jax.random.key(5)
+    monkeypatch.setenv("REPRO_VMEM_BUDGET_BYTES", str(1 << 17))
+    bv, n_pad, wp = vmem_budget._sampler_geometry(n, 2, None)
+    assert vmem_budget.sampler_d_tile(
+        df, 2, block_v=bv, n_pad=n_pad, resident=False) < df
+
+    def run(sampler, gm="auto"):
+        return sample_incidence(nbr, prob, wt, key, theta=64, n=n,
+                                model="IC", max_steps=12,
+                                sampler=sampler, gather=gm,
+                                fwd=(None if sampler == "dense" else fwd))
+
+    want = run("dense")
+    got = run("kernel", gather)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_heavy_hub_resolve_gather_auto_default_budget():
+    """At the real 14 MiB default the hub fixture's coin-plane fits
+    (auto -> resident); blowing the plane up past the budget flips the
+    decision to streamed — the solve, not a constant, decides."""
+    from repro.kernels import vmem_budget
+    assert vmem_budget.resolve_gather(
+        "auto", n=96, d_pad=32, w=2) == "resident"
+    assert vmem_budget.resolve_gather(
+        "auto", n=1 << 17, d_pad=64, w=16) == "streamed"
+
+
 def test_kernel_sampler_single_pallas_call_per_step_jaxpr():
     """Acceptance criterion: sampler="kernel" fuses each BFS expansion
     step into exactly ONE pallas_call (the while-loop body traces
@@ -111,3 +281,40 @@ def test_kernel_sampler_single_pallas_call_per_step_jaxpr():
     assert str(make("kernel")).count("pallas_call") == 1
     assert str(make("packed")).count("pallas_call") == 0
     assert str(make("dense")).count("pallas_call") == 0
+
+
+def test_resident_gather_eliminates_gmask_intermediate_jaxpr():
+    """The point of the in-kernel rev_slot gather: with
+    gather="resident" the XLA-side [n, d_out, W] gmask (an HBM
+    round-trip per BFS step) must NOT appear anywhere in the sampler
+    jaxpr; with gather="streamed" it does (sanity that the assert can
+    see it).  The hub fixture makes d_out differ from the coin-plane
+    slot count so the gmask shape string cannot false-match the coin
+    mask."""
+    from repro.core.rrr import sample_incidence
+    from repro.graphs.csr import padded_adjacency, padded_forward_adjacency
+
+    g = _heavy_hub_graph()
+    n = g.num_vertices
+    nbr, prob, wt = padded_adjacency(g)
+    fwd = padded_forward_adjacency(g)
+    df = int(fwd[0].shape[1])
+    d_pad = -(-int(nbr.shape[1]) // 32) * 32
+    assert df != d_pad, (df, d_pad)   # else the assert below is vacuous
+    w = 2
+
+    def make(gather):
+        return str(jax.make_jaxpr(
+            lambda: sample_incidence(
+                nbr, prob, wt, jax.random.key(0), theta=32 * w, n=n,
+                model="IC", max_steps=8, sampler="kernel",
+                gather=gather, fwd=fwd))())
+
+    gmask_shape = f"u32[{n},{df},{w}]"
+    streamed = make("streamed")
+    resident = make("resident")
+    assert gmask_shape in streamed            # the round-trip exists...
+    assert gmask_shape not in resident        # ...and resident kills it
+    # both layouts stay one fused launch per BFS step
+    assert streamed.count("pallas_call") == 1
+    assert resident.count("pallas_call") == 1

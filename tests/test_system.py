@@ -46,3 +46,38 @@ def test_im_driver_cli_smoke():
     rc = im_driver.main(["--n", "200", "--k", "4", "--max-theta", "512",
                          "--selector", "greediris", "--eval-sims", "8"])
     assert rc == 0
+
+
+def test_im_driver_gather_flag_smoke():
+    """--gather and --block-v thread through to the sampler without
+    changing the run's exit status (kernel sampler so the flag is
+    actually consumed)."""
+    from repro.launch import im_driver
+    rc = im_driver.main(["--n", "120", "--k", "4", "--max-theta", "256",
+                         "--selector", "greediris", "--eval-sims", "4",
+                         "--sampler", "kernel", "--gather", "resident",
+                         "--block-v", "32"])
+    assert rc == 0
+
+
+def test_im_driver_flag_validation_messages(capsys):
+    """Bad knob values fail at the argparse boundary with actionable
+    messages, not deep inside a jit trace."""
+    import pytest
+    from repro.launch import im_driver
+
+    cases = [
+        (["--coin-chunk", "0"], "coin-chunk"),
+        (["--coin-chunk", "x"], "integer slot count"),
+        (["--chunk-size", "-3"], "chunk-size"),
+        (["--chunk-size", "many"], "chunk-size"),
+        (["--block-v", "0"], "block-v"),
+        (["--block-v", "eight"], "block-v"),
+        (["--gather", "vmem"], "invalid choice"),
+    ]
+    for extra, needle in cases:
+        with pytest.raises(SystemExit) as ei:
+            im_driver.main(["--n", "64", "--k", "2"] + extra)
+        assert ei.value.code == 2
+        err = capsys.readouterr().err
+        assert needle in err, (extra, err)

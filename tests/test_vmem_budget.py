@@ -1,0 +1,145 @@
+"""Shared VMEM-budget accounting + tuned tables (kernels/vmem_budget.py).
+
+Pins the contract the autotuner and every resolve-time "auto" policy
+share: budget resolution order (override > env > default), the
+analytic tile/chunk solves, the tuned-table loader (including its
+clamp — a table tuned under a larger budget can never overflow the
+analytic solve), and the gather-mode resolution."""
+import json
+
+import pytest
+
+from repro.kernels import gain_core, vmem_budget as vb
+
+
+@pytest.fixture(autouse=True)
+def _fresh_tables(monkeypatch, tmp_path):
+    """Point the tuned-table dir at an empty tmp dir for every test so
+    the committed benchmarks/tuned/<backend>.json cannot leak in, and
+    drop the lru cache on both sides."""
+    monkeypatch.setenv("REPRO_TUNED_DIR", str(tmp_path))
+    vb.clear_table_cache()
+    yield tmp_path
+    vb.clear_table_cache()
+
+
+def _write_table(d, families):
+    (d / "cpu.json").write_text(json.dumps(
+        {"meta": {"backend": "cpu"}, "families": families}))
+    vb.clear_table_cache()
+
+
+# ---------------------------------------------------------------- budget
+def test_budget_resolution_order(monkeypatch):
+    assert vb.budget_bytes(None) == vb.VMEM_BUDGET_BYTES
+    monkeypatch.setenv("REPRO_VMEM_BUDGET_BYTES", "12345")
+    assert vb.budget_bytes(None) == 12345
+    assert vb.budget_bytes(777) == 777   # explicit beats env
+
+
+# ----------------------------------------------------------- tuned table
+def test_tuned_value_reads_table(_fresh_tables):
+    _write_table(_fresh_tables, {"rrr_expand": {"block_v": 64}})
+    assert vb.tuned_value("rrr_expand", "block_v", backend="cpu") == 64
+    assert vb.tuned_value("rrr_expand", "coin_chunk",
+                          backend="cpu") is None
+    assert vb.tuned_value("greedy_pick", "block_v", backend="cpu") is None
+
+
+def test_tuned_value_absent_or_malformed_is_none(_fresh_tables):
+    assert vb.tuned_value("rrr_expand", "block_v", backend="cpu") is None
+    (_fresh_tables / "cpu.json").write_text("{not json")
+    vb.clear_table_cache()
+    assert vb.tuned_value("rrr_expand", "block_v", backend="cpu") is None
+    _write_table(_fresh_tables, {"rrr_expand": {"block_v": 0},
+                                 "greedy_pick": {"block_v": "x"},
+                                 "lazy_greedy": 7})
+    assert vb.tuned_value("rrr_expand", "block_v", backend="cpu") is None
+    assert vb.tuned_value("greedy_pick", "block_v", backend="cpu") is None
+    assert vb.tuned_value("lazy_greedy", "block_v", backend="cpu") is None
+
+
+def test_auto_block_v_tuned_else_default(_fresh_tables):
+    assert vb.auto_block_v("greedy_pick", backend="cpu") \
+        == vb.DEFAULT_BLOCK_V
+    _write_table(_fresh_tables, {"greedy_pick": {"block_v": 256}})
+    assert vb.auto_block_v("greedy_pick", backend="cpu") == 256
+
+
+# -------------------------------------------------------------- receiver
+def test_receiver_chunk_size_analytic_and_tuned_clamp(_fresh_tables):
+    b, w, k = 29, 128, 8
+    c = vb.receiver_chunk_size(b, w, k, backend="cpu")
+    assert c >= 8 and c % 8 == 0
+    # the solved double buffer actually fits next to the bucket state
+    wp = gain_core.padded_size(
+        w, gain_core.effective_block(w, 512, gain_core.LANE))
+    state = vb.WORD_BYTES * (2 * b * wp + 2 * b * k + 4 * b)
+    assert state + 2 * c * wp * vb.WORD_BYTES <= vb.VMEM_BUDGET_BYTES
+    # tuned preference clamps DOWN only (a table tuned under a larger
+    # budget can never push the solve past the analytic bound)
+    _write_table(_fresh_tables,
+                 {"bucket_insert_stream": {"chunk_size": 16}})
+    assert vb.receiver_chunk_size(b, w, k, backend="cpu") == 16
+    _write_table(_fresh_tables,
+                 {"bucket_insert_stream": {"chunk_size": 10 ** 9}})
+    assert vb.receiver_chunk_size(b, w, k, backend="cpu") == c
+    # the stream length caps the chunk regardless of table/budget
+    assert vb.receiver_chunk_size(b, w, k, total=24, backend="cpu") == 24
+
+
+# --------------------------------------------------------------- sampler
+def test_sampler_d_tile_default_budget_tiles_heavy_hub():
+    """Pure-math check at the real 14 MiB default: a hub whose
+    streamed scratch would want ~2*BV*d_out*W per slot overflows and
+    the solve tiles d_out; a modest graph does not tile at all."""
+    bv, n_pad, wp = vb._sampler_geometry(4096, 64, 128)
+    assert vb.sampler_state_bytes(n_pad, wp, bv) < vb.VMEM_BUDGET_BYTES
+    df = 4096   # heavy hub: 4k forward slots x 64 words
+    dt = vb.sampler_d_tile(df, 64, block_v=bv, n_pad=n_pad,
+                           resident=False)
+    assert 1 <= dt < df
+    # the solved tile honours the budget with the lane pad charged
+    used = (vb.sampler_state_bytes(n_pad, wp, bv)
+            + 2 * bv * (gain_core.padded_size(dt * 64, gain_core.LANE)
+                        + dt) * vb.WORD_BYTES)
+    assert used <= vb.VMEM_BUDGET_BYTES
+    # small graph: single tile
+    bv2, n_pad2, _ = vb._sampler_geometry(512, 8, 128)
+    assert vb.sampler_d_tile(32, 8, block_v=bv2, n_pad=n_pad2,
+                             resident=False) == 32
+
+
+def test_sampler_d_tile_resident_charges_plane():
+    bv, n_pad, wp = vb._sampler_geometry(4096, 16, 128)
+    plane_rows = gain_core.padded_size(4096 * 32 + 1, gain_core.SUBLANE)
+    dt_with = vb.sampler_d_tile(256, 16, block_v=bv, n_pad=n_pad,
+                                resident=True, plane_rows=plane_rows)
+    dt_without = vb.sampler_d_tile(256, 16, block_v=bv, n_pad=n_pad,
+                                   resident=True)
+    assert dt_with <= dt_without
+    assert dt_with >= 1
+    used = (vb.sampler_state_bytes(n_pad, wp, bv, plane_rows)
+            + (2 * wp + 4) * bv * dt_with * vb.WORD_BYTES)
+    assert used <= vb.VMEM_BUDGET_BYTES or dt_with == 1
+
+
+# ---------------------------------------------------------------- gather
+def test_resolve_gather_validation_and_passthrough():
+    for mode in ("resident", "streamed"):
+        assert vb.resolve_gather(mode, n=64, d_pad=32, w=2) == mode
+    assert vb.resolve_gather(None, n=64, d_pad=32, w=2) \
+        == vb.resolve_gather("auto", n=64, d_pad=32, w=2)
+    with pytest.raises(ValueError, match="unknown gather 'vmem'"):
+        vb.resolve_gather("vmem", n=64, d_pad=32, w=2)
+
+
+def test_resolve_gather_auto_follows_budget():
+    # small plane fits -> resident; same shape under a starved budget
+    # -> streamed (the budget, not the shape, flips the decision)
+    assert vb.resolve_gather("auto", n=256, d_pad=32, w=4) == "resident"
+    assert vb.resolve_gather("auto", n=256, d_pad=32, w=4,
+                             vmem_budget_bytes=1 << 16) == "streamed"
+    # genuinely huge plane at the default budget -> streamed
+    assert vb.resolve_gather("auto", n=1 << 18, d_pad=64,
+                             w=32) == "streamed"
