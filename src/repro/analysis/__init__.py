@@ -1,0 +1,8 @@
+"""Static analysis for the kernel zoo: contract registry, structural
+jaxpr/HLO checker, and repo-convention AST lint.
+
+Run ``python -m repro.analysis.check --all`` (or see README "Static
+analysis") for the CLI; :mod:`repro.analysis.contracts` holds the
+per-family invariants, :mod:`repro.analysis.jaxpr_check` the
+equation-walking primitives the tests also import.
+"""

@@ -1,0 +1,261 @@
+"""Repo-convention AST lint: rules ruff cannot express.
+
+Four rules, each encoding a convention this codebase's Pallas kernels
+depend on:
+
+``traced-if``
+    A Python ``if``/``while`` on a value derived from a kernel ref
+    inside a kernel body.  Kernel bodies trace once — a Python branch
+    on traced data either crashes at trace time (ConcretizationError)
+    or, worse, silently bakes in the tracer's boolean.  Branching on
+    traced values must go through ``lax.cond``/``jnp.where``/
+    ``pl.when``.  Kernel bodies are recognized by their parameter
+    names: any function with a positional parameter ending ``_ref`` or
+    ``_hbm`` (the repo-wide naming convention for Pallas refs).
+
+``host-call-in-jit``
+    ``np.``/``numpy.`` calls inside a ``jax.jit``-decorated function.
+    Host numpy silently constant-folds traced values or raises at
+    trace time; jitted code uses ``jnp``.
+
+``blockspec-pad``
+    A literal ``pl.BlockSpec`` block shape whose last dim is not a
+    multiple of LANE (128) or whose second-to-last dim is neither 1
+    nor a multiple of SUBLANE (8).  Mosaic rounds such blocks up
+    silently, so the VMEM the contract checker computes from specs
+    would lie.
+
+``missing-interpret``
+    A ``pl.pallas_call(...)`` site with no ``interpret=`` argument and
+    no ``**kwargs`` passthrough.  Every launch in this repo must plumb
+    the interpret knob so kernels run on CPU CI (see
+    ``kernels/ops._interpret``).
+
+Each rule reports :class:`LintViolation` records; the CLI
+(``python -m repro.analysis.check --ast``) renders/serializes them.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+from typing import Iterator, List, Sequence
+
+LANE = 128
+SUBLANE = 8
+
+#: Suffixes that mark a positional parameter as a Pallas kernel ref —
+#: the repo-wide convention (``frontier_ref``, ``nbr_hbm``, ...).
+REF_SUFFIXES = ("_ref", "_hbm")
+
+DEFAULT_ROOTS = ("src/repro",)
+
+
+@dataclasses.dataclass(frozen=True)
+class LintViolation:
+    rule: str
+    file: str
+    line: int
+    message: str
+
+    def as_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name for a call target / attribute chain."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _is_kernel_body(fn: ast.AST) -> bool:
+    if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return False
+    pos = fn.args.posonlyargs + fn.args.args
+    return any(a.arg.endswith(REF_SUFFIXES) for a in pos)
+
+
+def _jit_decorated(fn: ast.AST) -> bool:
+    if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return False
+    for dec in fn.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = _dotted(target)
+        if name in ("jax.jit", "jit"):
+            return True
+        # functools.partial(jax.jit, ...) / partial(jit, ...)
+        if (isinstance(dec, ast.Call)
+                and name in ("functools.partial", "partial")
+                and dec.args
+                and _dotted(dec.args[0]) in ("jax.jit", "jit")):
+            return True
+    return False
+
+
+# ------------------------------------------------------------ traced-if
+def _names_in(node: ast.AST) -> Iterator[str]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            yield sub.id
+
+
+def _check_kernel_body(fn, path: str, out: List[LintViolation]):
+    """Taint = the ref params plus anything assigned from a tainted
+    expression (two propagation passes cover the straight-line reads
+    kernels actually contain); flag If/While whose test is tainted.
+
+    ``for`` is deliberately NOT flagged: kernels iterate Python loops
+    over static ranges and DMA plans (``for dma in tile_dmas(...)``),
+    which is the normal unrolling idiom.
+    """
+    pos = fn.args.posonlyargs + fn.args.args
+    tainted = {a.arg for a in pos if a.arg.endswith(REF_SUFFIXES)}
+
+    for _ in range(2):
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                if any(n in tainted for n in _names_in(node.value)):
+                    for target in node.targets:
+                        for name in _names_in(target):
+                            tainted.add(name)
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                value = node.value
+                if value is not None and any(
+                        n in tainted for n in _names_in(value)):
+                    for name in _names_in(node.target):
+                        tainted.add(name)
+
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.If, ast.While)):
+            hot = sorted(set(_names_in(node.test)) & tainted)
+            if hot:
+                kind = "if" if isinstance(node, ast.If) else "while"
+                out.append(LintViolation(
+                    "traced-if", path, node.lineno,
+                    f"Python `{kind}` on traced value(s) {hot} inside "
+                    f"kernel body {fn.name!r} — kernel bodies trace "
+                    "once; use lax.cond/jnp.where/pl.when"))
+
+
+# ------------------------------------------------------ host-call-in-jit
+_HOST_PREFIXES = ("np.", "numpy.")
+#: Host-side helpers that are fine at trace time (shape arithmetic on
+#: static values — they never touch tracers in this repo's usage).
+_HOST_OK = frozenset((
+    "np.asarray",))
+
+
+def _check_jit_fn(fn, path: str, out: List[LintViolation]):
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _dotted(node.func)
+        if (name.startswith(_HOST_PREFIXES)
+                and name not in _HOST_OK):
+            out.append(LintViolation(
+                "host-call-in-jit", path, node.lineno,
+                f"host numpy call `{name}` inside jitted function "
+                f"{fn.name!r} — host numpy constant-folds or raises "
+                "on tracers; use jnp"))
+
+
+# -------------------------------------------------------- blockspec-pad
+def _literal_int_tuple(node: ast.AST):
+    if not isinstance(node, (ast.Tuple, ast.List)):
+        return None
+    dims = []
+    for el in node.elts:
+        if (isinstance(el, ast.Constant)
+                and isinstance(el.value, int)
+                and not isinstance(el.value, bool)):
+            dims.append(el.value)
+        else:
+            return None     # symbolic dim somewhere -> not checkable
+    return tuple(dims)
+
+
+def _check_blockspec(node: ast.Call, path: str,
+                     out: List[LintViolation]):
+    shape_arg = None
+    if node.args:
+        shape_arg = node.args[0]
+    else:
+        for kw in node.keywords:
+            if kw.arg == "block_shape":
+                shape_arg = kw.value
+    dims = _literal_int_tuple(shape_arg) if shape_arg is not None else None
+    if not dims:
+        return
+    if all(d == 1 for d in dims):
+        return      # scalar-per-grid-cell block: a deliberate idiom
+    bad = []
+    if dims[-1] % LANE != 0:
+        bad.append(f"last dim {dims[-1]} is not a multiple of "
+                   f"LANE={LANE}")
+    if len(dims) >= 2 and dims[-2] != 1 and dims[-2] % SUBLANE != 0:
+        bad.append(f"second-to-last dim {dims[-2]} is neither 1 nor a "
+                   f"multiple of SUBLANE={SUBLANE}")
+    if bad:
+        out.append(LintViolation(
+            "blockspec-pad", path, node.lineno,
+            f"BlockSpec block shape {dims}: " + "; ".join(bad)
+            + " — Mosaic pads silently and the static VMEM accounting "
+              "would undercount"))
+
+
+# ---------------------------------------------------- missing-interpret
+def _check_pallas_call(node: ast.Call, path: str,
+                       out: List[LintViolation]):
+    for kw in node.keywords:
+        if kw.arg == "interpret" or kw.arg is None:   # None = **kwargs
+            return
+    out.append(LintViolation(
+        "missing-interpret", path, node.lineno,
+        "pl.pallas_call without an interpret= argument — plumb the "
+        "knob (kernels/ops._interpret) so the kernel runs on CPU CI"))
+
+
+# --------------------------------------------------------------- driver
+def lint_source(source: str, path: str) -> List[LintViolation]:
+    """All rule violations in one file's source text."""
+    out: List[LintViolation] = []
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as exc:
+        out.append(LintViolation("syntax", path, exc.lineno or 0,
+                                 f"unparseable: {exc.msg}"))
+        return out
+    for node in ast.walk(tree):
+        if _is_kernel_body(node):
+            _check_kernel_body(node, path, out)
+        if _jit_decorated(node):
+            _check_jit_fn(node, path, out)
+        if isinstance(node, ast.Call):
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "BlockSpec"):
+                _check_blockspec(node, path, out)
+            elif (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "pallas_call"):
+                # attribute form (pl.pallas_call) only: a local helper
+                # whose name merely contains it is not a launch site
+                _check_pallas_call(node, path, out)
+    return out
+
+
+def lint_paths(roots: Sequence[str] = DEFAULT_ROOTS,
+               repo_root: str = ".") -> List[LintViolation]:
+    """Lint every ``*.py`` under the given roots (skipping this
+    analysis package's own violation fixtures if they ever move into
+    the tree)."""
+    base = pathlib.Path(repo_root)
+    out: List[LintViolation] = []
+    for root in roots:
+        for path in sorted((base / root).rglob("*.py")):
+            rel = str(path.relative_to(base))
+            out.extend(lint_source(path.read_text(), rel))
+    return out

@@ -99,6 +99,17 @@ Model = Literal["IC", "LT", "WC"]
 MODELS = ("IC", "LT", "WC")
 ENGINES = ("map", "packed", "kernel")
 
+# Static contract (proved by repro.analysis on a canonical fixture):
+# the kernel engine reuses the sampler's resident expansion kernel —
+# one fused launch per diffusion step inside the while body.
+CONTRACT = dict(
+    family="cascade",
+    launches=1,
+    in_loop=True,
+    dtypes=("bool", "float32", "int32", "key<fry>", "uint32"),
+    aliases=(),
+)
+
 
 def resolve_engine(engine: Optional[str], default: str = "packed") -> str:
     """Validate the cascade engine triad (mirrors

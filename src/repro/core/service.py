@@ -63,6 +63,19 @@ from repro.graphs.csr import (CSRGraph, padded_adjacency,
 from repro.core.rrr import resolve_sampler, sample_incidence
 
 
+# Static contract (proved by repro.analysis on a canonical fixture):
+# B concurrent seed-constrained queries batch into ONE vmapped launch
+# whose grid carries the batch axis — the sketch pool itself is shared
+# (in_axes=None), so the launch count must not scale with B.
+CONTRACT = dict(
+    family="service",
+    launches=1,
+    in_loop=False,
+    dtypes=("bool", "int32", "uint32"),
+    aliases=(),
+)
+
+
 class EmptyPoolError(RuntimeError):
     """Raised when answering against a pool that holds no samples."""
 

@@ -39,11 +39,17 @@ _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 
 
 def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        raise ValueError(
+            f"unknown HLO dtype {dtype!r} in collective shape "
+            f"{dtype}[{dims}] — add it to _DTYPE_BYTES; silently "
+            "guessing a width would let collective-byte accounting "
+            "undercount")
     n = 1
     for d in dims.split(","):
         if d:
             n *= int(d)
-    return n * _DTYPE_BYTES.get(dtype, 4)
+    return n * _DTYPE_BYTES[dtype]
 
 
 @dataclasses.dataclass

@@ -56,6 +56,20 @@ from repro.kernels import gain_core
 
 BLOCK_W = 512
 
+# Static contract (proved by repro.analysis on a canonical fixture).
+# Both receiver variants stage exactly one top-level launch: the chunk
+# kernel per [C, W] chunk, the pipelined stream kernel per whole
+# [R, C, W] stream (float32 is the bucket thresholds).
+CONTRACT = dict(
+    family="bucket_insert",
+    dtypes=("bool", "float32", "int32", "uint32"),
+    aliases=(),
+    variants=dict(
+        chunk=dict(launches=1, in_loop=False),
+        stream=dict(launches=1, in_loop=False),
+    ),
+)
+
 # The chunk-size VMEM solve lives in ``kernels.vmem_budget``
 # (``receiver_chunk_size``) — the single budget model shared with the
 # sampler/sender tile solves and the autotuner.

@@ -59,6 +59,18 @@ from repro.kernels import gain_core
 
 BLOCK_V = 128
 
+# Invariants the static contract checker (repro.analysis) proves on a
+# canonical fixture: the whole k-pick solve is ONE top-level launch
+# (no loop wrapping it — all picks run inside the kernel), no f64 or
+# float at all in the trace, no aliasing.
+CONTRACT = dict(
+    family="greedy_pick",
+    launches=1,
+    in_loop=False,
+    dtypes=("bool", "int32", "uint32"),
+    aliases=(),
+)
+
 
 def sweep_tile_argmax(tile, covered, seeds, t, block_v: int):
     """Masked gain sweep + within-tile argmax of one [BV, Wp] row tile

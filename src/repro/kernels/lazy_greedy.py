@@ -83,6 +83,17 @@ from repro.kernels import gain_core, greedy_pick
 
 BLOCK_V = 128
 
+# Static contract (proved by repro.analysis on a canonical fixture):
+# one top-level launch for all k picks, stale-bound skipping included;
+# integer/bool trace only; no aliasing.
+CONTRACT = dict(
+    family="lazy_greedy",
+    launches=1,
+    in_loop=False,
+    dtypes=("bool", "int32", "uint32"),
+    aliases=(),
+)
+
 # Upper-bound initializer: larger than any achievable gain (< 2^31).
 _UB_INIT = jnp.iinfo(jnp.int32).max
 

@@ -76,6 +76,19 @@ from repro.kernels import gain_core, vmem_budget
 
 BLOCK_V = 128
 
+# Invariants the static contract checker (repro.analysis) proves on a
+# canonical fixture: one fused launch per BFS step (the launch sits in
+# the sampler's while body), no aliasing, and no dtype outside this
+# set (the key<fry> is the sampler's PRNG key threading through the
+# trace — the kernel itself never sees it).
+CONTRACT = dict(
+    family="rrr_expand",
+    launches=1,
+    in_loop=True,
+    dtypes=("bool", "float32", "int32", "key<fry>", "uint32"),
+    aliases=(),
+)
+
 
 def _kernel(nbr_hbm, gmask_hbm, frontier_ref, visited_ref,
             newf_ref, visout_ref, hit_ref, nbr_buf, gm_buf,

@@ -34,7 +34,7 @@ def _coin_chunk_arg(text: str) -> int:
     except ValueError:
         raise argparse.ArgumentTypeError(
             f"expected an integer slot count, got {text!r} (the IC "
-            "coin-draw width, e.g. 32)")
+            "coin-draw width, e.g. 32)") from None
     if v < 1:
         raise argparse.ArgumentTypeError(
             f"must be >= 1, got {v} — coin-chunk is the number of "
@@ -54,7 +54,7 @@ def _chunk_size_arg(text: str):
         raise argparse.ArgumentTypeError(
             f"expected 'auto' or an integer candidate count, got "
             f"{text!r} (e.g. --chunk-size auto, --chunk-size 256, or "
-            "0 for the default policy)")
+            "0 for the default policy)") from None
     if v < 0:
         raise argparse.ArgumentTypeError(
             f"must be >= 0, got {v} — a positive candidate count, 0 "
@@ -73,7 +73,7 @@ def _block_v_arg(text: str):
     except ValueError:
         raise argparse.ArgumentTypeError(
             f"expected 'auto' or an integer row-tile size, got "
-            f"{text!r} (e.g. --block-v 128)")
+            f"{text!r} (e.g. --block-v 128)") from None
     if v < 1:
         raise argparse.ArgumentTypeError(
             f"must be >= 1, got {v} — the kernel row-tile size is "

@@ -223,7 +223,7 @@ def _run_stack(unit, prm_stack, x, positions, cfg, rules, cache_stack):
         carry = (x, jnp.zeros(()))
         ys_list = []
         for i in range(count):
-            carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+            carry, y = body(carry, jax.tree.map(lambda a, i=i: a[i], xs))
             ys_list.append(y)
         (x, aux) = carry
         if has_cache:
@@ -311,7 +311,8 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype):
             else:
                 c = ssm_lib.init_ssm_cache(cfg, batch, dtype)
             unit_caches[f"slot{j}"] = jax.tree.map(
-                lambda a: jnp.broadcast_to(a[None], (count, *a.shape)), c)
+                lambda a, count=count: jnp.broadcast_to(
+                    a[None], (count, *a.shape)), c)
         caches.append(unit_caches)
     return caches
 

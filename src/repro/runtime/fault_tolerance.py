@@ -41,9 +41,9 @@ class PoisonStep(RuntimeError):
 
 
 class RunSupervisor:
-    def __init__(self, store, cfg: SupervisorConfig = SupervisorConfig()):
+    def __init__(self, store, cfg: Optional[SupervisorConfig] = None):
         self.store = store
-        self.cfg = cfg
+        self.cfg = cfg if cfg is not None else SupervisorConfig()
         self.failures_at: dict[int, int] = {}
         self.restarts = 0
 

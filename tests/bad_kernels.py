@@ -1,0 +1,100 @@
+"""Deliberately-broken kernels: the contract checker's violation
+fixtures (tests/test_analysis.py asserts each one is caught by exactly
+the intended rule).
+
+This module lives in tests/ on purpose — the CI AST lint runs over
+src/repro only, so the AST-rule fixtures here (Python `if` on a traced
+ref, host numpy in a jitted fn, unpadded BlockSpec, pallas_call with
+no interpret=) stay out of its way.  Nothing here is ever executed:
+contract fixtures are traced (`jax.make_jaxpr`), AST fixtures are
+parsed (`inspect.getsource` -> `ast_rules.lint_source`).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _identity(x, *, interpret=True, aliases=None):
+    kwargs = {}
+    if aliases is not None:
+        kwargs["input_output_aliases"] = aliases
+    return pl.pallas_call(
+        _copy_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret, **kwargs)(x)
+
+
+def fixture_arg():
+    return jnp.ones((8, 128), jnp.float32)
+
+
+# ----------------------------------------------- contract-rule fixtures
+def double_launch(x):
+    """Two pallas_call equations where the contract expects one."""
+    return _identity(_identity(x))
+
+
+def loop_launch(x):
+    """The launch hides inside a loop body — per-iteration relaunch
+    where the contract demands one top-level launch."""
+    return jax.lax.fori_loop(0, 4, lambda i, v: _identity(v), x)
+
+
+def f64_leak(x):
+    """An f64 upcast sneaks into the trace (visible under enable_x64;
+    default config would silently downcast it, which is exactly why
+    the checker traces the whitelist explicitly)."""
+    return _identity((x.astype(jnp.float64) * 2.0).astype(jnp.float32))
+
+
+def gmask_intermediate(x):
+    """Materializes a [n, d_out, W]-shaped uint32 intermediate — the
+    HBM round-trip the resident sampler contract forbids."""
+    gmask = jnp.broadcast_to(
+        x[:4, :2].astype(jnp.uint32)[:, None, :], (4, 7, 2)) + 1
+    return gmask.sum(axis=1)
+
+
+def uninterpreted_launch(x):
+    """interpret=False hardcoded — unrunnable on CPU CI."""
+    return _identity(x, interpret=False)
+
+
+def aliased_launch(x):
+    """Donates its input where the contract expects no aliasing."""
+    return _identity(x, aliases={0: 0})
+
+
+# ---------------------------------------------------- AST-rule fixtures
+def bad_traced_if_kernel(x_ref, o_ref):
+    gate = x_ref[0, 0]
+    big = gate * 2
+    if big > 0:                     # traced-if: Python branch on a ref
+        o_ref[...] = x_ref[...]
+
+
+@jax.jit
+def bad_host_call(x):
+    return jnp.asarray(np.tanh(x))  # host-call-in-jit
+
+
+@functools.partial(jax.jit, static_argnames=())
+def bad_host_call_partial(x):
+    return np.square(x)             # host-call-in-jit (partial form)
+
+
+def bad_blockspec_factory():
+    return pl.BlockSpec((8, 100), lambda i: (i, 0))   # blockspec-pad
+
+
+def bad_missing_interpret(x):
+    return pl.pallas_call(          # missing-interpret
+        _copy_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)

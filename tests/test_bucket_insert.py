@@ -228,20 +228,24 @@ def test_pipelined_full_bucket_survives_multichunk_stream():
 
 
 def test_insert_stream_single_pallas_call():
-    """The acceptance criterion: one pallas_call per candidate stream
-    (the scan fallback stages zero — it is pure lax)."""
+    """The acceptance criterion: one pallas_call equation per candidate
+    stream, sitting at top level — NOT inside a loop over chunks (the
+    scan fallback stages zero — it is pure lax)."""
+    from repro.analysis import jaxpr_check
+
     state = streaming.init_state(5, 0.077, 10.0, 11)
     ids = jnp.zeros((3, 4), jnp.int32)
     rows = jnp.zeros((3, 4, 11), jnp.uint32)
     jx = jax.make_jaxpr(
         lambda s, i, r: streaming.insert_stream(s, i, r, k=5))(
             state, ids, rows)
-    assert str(jx).count("pallas_call") == 1
+    (site,) = jaxpr_check.launch_sites(jx)
+    assert not site.in_loop     # the whole stream is ONE launch
     jx_fb = jax.make_jaxpr(
         lambda s, i, r: streaming.insert_stream(s, i, r, k=5,
                                                 use_kernel=False))(
             state, ids, rows)
-    assert str(jx_fb).count("pallas_call") == 0
+    assert jaxpr_check.count_pallas_calls(jx_fb) == 0
 
 
 def test_insert_stream_matches_flat_insert_chunk(incidence):

@@ -252,20 +252,24 @@ def test_lt_live_edge_matches_threshold_distribution():
 # ---------------------------------------------------------------------
 
 def test_kernel_engine_step_is_one_pallas_call():
-    """The fused cascade step lowers to exactly ONE pallas_call (the
-    shared rrr_expand kernel); the map/packed engines lower to none."""
+    """The fused cascade step lowers to exactly ONE pallas_call
+    equation, inside the diffusion while-body (the shared rrr_expand
+    kernel); the map/packed engines lower to none."""
+    from repro.analysis import jaxpr_check
+
     g = generators.erdos_renyi(40, 4.0, seed=10)
     seeds = np.array([0, 1])
 
     def trace(engine):
-        return str(jax.make_jaxpr(
+        return jax.make_jaxpr(
             lambda k: cascade.simulate_cascades(
                 g, seeds, k, model="IC", num_sims=32, max_steps=4,
-                engine=engine))(jax.random.key(0)))
+                engine=engine))(jax.random.key(0))
 
-    assert trace("kernel").count("pallas_call") == 1
-    assert trace("packed").count("pallas_call") == 0
-    assert trace("map").count("pallas_call") == 0
+    (site,) = jaxpr_check.launch_sites(trace("kernel"))
+    assert site.in_loop         # one fused launch per diffusion step
+    assert jaxpr_check.count_pallas_calls(trace("packed")) == 0
+    assert jaxpr_check.count_pallas_calls(trace("map")) == 0
 
 
 # ---------------------------------------------------------------------
@@ -312,14 +316,16 @@ def test_kernel_engine_gather_modes_bit_identical(model, gather):
 
 def test_kernel_engine_resident_is_one_pallas_call():
     """The resident gather keeps the one-launch-per-step pin."""
+    from repro.analysis import jaxpr_check
+
     g = _hub_graph()
     seeds = np.array([0, 1])
 
     def trace(gather):
-        return str(jax.make_jaxpr(
+        return jax.make_jaxpr(
             lambda k: cascade.simulate_cascades(
                 g, seeds, k, model="IC", num_sims=32, max_steps=4,
-                engine="kernel", gather=gather))(jax.random.key(0)))
+                engine="kernel", gather=gather))(jax.random.key(0))
 
-    assert trace("resident").count("pallas_call") == 1
-    assert trace("streamed").count("pallas_call") == 1
+    assert jaxpr_check.count_pallas_calls(trace("resident")) == 1
+    assert jaxpr_check.count_pallas_calls(trace("streamed")) == 1
