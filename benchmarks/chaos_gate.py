@@ -1,0 +1,264 @@
+"""Chaos gate: fault-injected resilience harness (the CI ``chaos`` job).
+
+The paper's deployment claims are resilience-by-construction: the
+RandGreedi guarantee is independent of the machine count m (Thm 3.1)
+and the §3.3.2 truncation knob ``alpha`` sheds receiver load under
+stragglers.  This gate makes both executable and regression-checked:
+
+* **partition drop** — a round with 1-of-m partitions dropped
+  (``local.greedy:drop``) must equal the clean m-1 survivors run
+  bit-for-bit, AND be *independent of the lost partition's data*: the
+  dropped partition's rows are corrupted to garbage and the round
+  re-run — still bit-identical (m-independence made executable);
+* **NaN detection** — a NaN-poisoned local solution is detected by the
+  non-finite-gains health check and its machine dropped, never merged;
+* **straggler → alpha shrink** — injected delays observed through a
+  fake clock trip the ``StragglerMonitor`` and shrink ``alpha_trunc``
+  through ``suggest_alpha`` (no real sleeps anywhere in the gate);
+* **quality floor** — the dropped round's seeds, measured by
+  Monte-Carlo cascade simulation, keep ``QUALITY_FLOOR`` x the
+  full-greedy reference spread (the same floor the spread gate holds
+  GreediRIS to);
+* **serve replay recovery** — the supervised serve replay
+  (``repro.launch.serve --recover``) runs in-process under injected
+  raise / write_fail / delay faults including a forced
+  restore-from-snapshot escalation, plus a kill + mid-trace resume,
+  each gated on bit-identity against a clean replay; their fault
+  reports are merged into this gate's single JSON artifact.
+
+Run directly (exits 1 on any gate failure)::
+
+    PYTHONPATH=src python -m benchmarks.chaos_gate --fast --json FAULT_report.json
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.core import cascade, maxcover, randgreedi
+from repro.core.rrr import sample_incidence
+from repro.graphs import generators
+from repro.graphs.csr import padded_adjacency
+from repro.runtime import faults
+from repro.runtime.fault_tolerance import StragglerMonitor
+
+QUALITY_FLOOR = 0.5    # dropped-round spread >= floor * greedy spread
+
+
+def _bit_equal(a: randgreedi.RandGreediResult,
+               b: randgreedi.RandGreediResult) -> bool:
+    return bool(np.array_equal(np.asarray(a.seeds), np.asarray(b.seeds))
+                and int(a.coverage) == int(b.coverage)
+                and np.array_equal(np.asarray(a.covered),
+                                   np.asarray(b.covered)))
+
+
+def _fake_clock(durations):
+    """A clock whose successive (t0, t1) call pairs yield exactly
+    ``durations`` — drives the StragglerMonitor without real time."""
+    ticks = []
+    t = 0.0
+    for d in durations:
+        ticks.extend((t, t + d))
+        t += d + 1.0
+    it = iter(ticks)
+    return lambda: next(it)
+
+
+def run_gate(*, n: int = 512, avg_deg: float = 6.0, m: int = 4,
+             k: int = 8, theta: int = 2048, num_sims: int = 64,
+             seed: int = 0, verbose: bool = True) -> faults.FaultReport:
+    report = faults.FaultReport()
+
+    def say(msg):
+        if verbose:
+            print(f"[chaos] {msg}")
+
+    g = generators.erdos_renyi(n, avg_deg, seed)
+    nbr, prob, wt = padded_adjacency(g)
+    key = jax.random.key(seed)
+    rows = sample_incidence(nbr, prob, wt, jax.random.fold_in(key, 1),
+                            theta=theta, n=g.num_vertices, model="IC")
+    round_key = jax.random.fold_in(key, 2)
+    eval_key = jax.random.fold_in(key, 99)
+
+    # ---- 1) partition drop == clean m-1 survivors run, bit-for-bit --
+    drop = 1
+    plan = faults.FaultPlan([faults.FaultSpec("local.greedy", "drop",
+                                              at=drop)])
+    res_drop, survivors, _ = faults.resilient_randgreedi(
+        rows, round_key, m=m, k=k, plan=plan)
+    want = tuple(j for j in range(m) if j != drop)
+    report.check("drop_marks_survivors", survivors == want,
+                 survivors=list(survivors), expected=list(want))
+    res_clean = randgreedi.randgreedi_maxcover(
+        rows, round_key, m=m, k=k, survivors=want)
+    ok = _bit_equal(res_drop, res_clean)
+    report.check("drop_equals_m1_run_bitwise", ok,
+                 coverage=int(res_drop.coverage),
+                 clean_coverage=int(res_clean.coverage))
+    say(f"drop machine {drop}: survivors={survivors} "
+        f"coverage={int(res_drop.coverage)} bit-identical "
+        f"to the m-1 run: {ok}")
+    report.add_events(plan)
+
+    # ---- 2) m-independence: corrupt the DEAD partition's rows -------
+    blocks = randgreedi.partition_blocks(rows.shape[0], m, round_key)
+    garbage = np.asarray(rows).copy()
+    garbage[blocks[drop]] = 0xFFFFFFFF     # all-ones cover: max damage
+    plan2 = faults.FaultPlan([faults.FaultSpec("local.greedy", "drop",
+                                               at=drop)])
+    res_garbage, _, _ = faults.resilient_randgreedi(
+        jax.numpy.asarray(garbage), round_key, m=m, k=k, plan=plan2)
+    ok = _bit_equal(res_drop, res_garbage)
+    report.check("lost_partition_data_independence", ok)
+    say(f"corrupted dropped partition's rows: result unchanged: {ok}")
+
+    # ---- 3) NaN-poisoned local solution is detected and dropped -----
+    plan3 = faults.FaultPlan([faults.FaultSpec("local.greedy", "nan",
+                                               at=2)])
+    res_nan, surv_nan, _ = faults.resilient_randgreedi(
+        rows, round_key, m=m, k=k, plan=plan3)
+    want = tuple(j for j in range(m) if j != 2)
+    ref_nan = randgreedi.randgreedi_maxcover(
+        rows, round_key, m=m, k=k, survivors=want)
+    ok = surv_nan == want and _bit_equal(res_nan, ref_nan)
+    report.check("nan_detected_and_dropped", ok,
+                 survivors=list(surv_nan))
+    say(f"NaN poison at machine 2: detected and dropped: {ok}")
+    report.add_events(plan3)
+
+    # ---- 4) stragglers shrink alpha via the monitor (fake clock) ----
+    sleeps: list[float] = []
+    plan4 = faults.FaultPlan(
+        [faults.FaultSpec("local.greedy", "delay", at=j, arg=0.01)
+         for j in range(3, 6)],
+        sleep_fn=sleeps.append)
+    monitor = StragglerMonitor()
+    clock = _fake_clock([1.0, 1.0, 1.0, 1e3, 1e6, 1e9])
+    res_slow, surv_slow, alpha_used = faults.resilient_randgreedi(
+        rows, round_key, m=6, k=k, plan=plan4, monitor=monitor,
+        alpha_trunc=1.0, clock=clock)
+    ok = (monitor.flags >= 3 and alpha_used == 0.5
+          and len(surv_slow) == 6 and len(sleeps) == 3)
+    report.check("straggler_shrinks_alpha", ok, flags=monitor.flags,
+                 alpha_used=alpha_used, injected_sleeps=len(sleeps))
+    say(f"3 injected stragglers: flags={monitor.flags} "
+        f"alpha 1.0->{alpha_used} (no real sleeps: recorded "
+        f"{sleeps})")
+    report.add_events(plan4)
+
+    # ---- 5) quality floor: dropped-round spread vs full greedy ------
+    ref_sol = maxcover.greedy_maxcover(rows, k, solver="scan")
+    def spread(seeds):
+        counts = np.asarray(cascade.cascade_counts(
+            g, np.asarray(seeds), eval_key, model="IC",
+            num_sims=num_sims))
+        return float(counts.mean())
+    ref_spread = spread(ref_sol.seeds)
+    drop_spread = spread(res_drop.seeds)
+    ok = drop_spread >= QUALITY_FLOOR * ref_spread
+    report.check("drop_round_quality_floor", ok,
+                 spread=drop_spread, reference=ref_spread,
+                 floor=QUALITY_FLOOR)
+    say(f"quality: dropped-round spread {drop_spread:.1f} vs greedy "
+        f"{ref_spread:.1f} (floor {QUALITY_FLOOR:.2f}x): {ok}")
+
+    # ---- 6) receiver.insert retry: merge raise is retried exactly ---
+    plan6 = faults.FaultPlan(
+        [faults.FaultSpec("receiver.insert", "raise", at=0)])
+    res_retry, _, _ = faults.resilient_randgreedi(
+        rows, round_key, m=m, k=k, plan=plan6)
+    full = randgreedi.randgreedi_maxcover(rows, round_key, m=m, k=k)
+    ok = _bit_equal(res_retry, full)
+    report.check("merge_retry_bit_identical", ok)
+    say(f"injected merge raise retried: bit-identical to clean: {ok}")
+    report.add_events(plan6)
+    return report
+
+
+def run_serve_replays(report: faults.FaultReport, *, n: int = 64,
+                      queries: int = 12, batch: int = 4,
+                      verbose: bool = True) -> bool:
+    """Run the supervised serve replay in-process under >= 3 injected
+    fault kinds (raise / write_fail / delay, with a forced
+    restore-from-snapshot escalation) plus a kill + mid-trace resume,
+    each gated on bit-identity; merge their JSON reports into ours."""
+    from repro.launch import serve
+
+    base = ["--n", str(n), "--queries", str(queries),
+            "--batch", str(batch), "--theta0", "256",
+            "--max-theta", "1024", "--slab", "128",
+            "--refresh-every", "1", "--recover", "--check"]
+    ok = True
+    with tempfile.TemporaryDirectory() as d:
+        # (a) injected faults incl. 3 consecutive answer raises (the
+        # retry budget is 2 -> forces the restore escalation).
+        rep = os.path.join(d, "serve_inject.json")
+        rc = serve.main(base + [
+            "--inject", "service.answer:raise:1",
+            "--inject", "service.answer:raise:2",
+            "--inject", "service.answer:raise:3",
+            "--inject", "checkpoint.write:write_fail:1",
+            "--inject", "service.admit:raise:2",
+            "--inject", "sampler.slab_fill:raise:3",
+            "--inject", "service.answer:delay:5:0.001",
+            "--fault-report", rep])
+        report.merge_file(rep)
+        ok &= report.check("serve_injected_replay_recovers", rc == 0,
+                           exit_code=rc)
+        if verbose:
+            print(f"[chaos] injected serve replay: rc={rc}")
+        # (b) kill after 2 batches, resume mid-trace from snapshots.
+        ck = os.path.join(d, "ckpt")
+        rep_kill = os.path.join(d, "serve_kill.json")
+        rep_resume = os.path.join(d, "serve_resume.json")
+        rc1 = serve.main(base + ["--ckpt-dir", ck, "--kill-after", "2",
+                                 "--fault-report", rep_kill])
+        rc2 = serve.main(base + ["--ckpt-dir", ck, "--resume-from", "2",
+                                 "--fault-report", rep_resume])
+        report.merge_file(rep_kill)
+        report.merge_file(rep_resume)
+        ok &= report.check("serve_kill_resume_bit_identical",
+                           rc1 == 0 and rc2 == 0,
+                           kill_rc=rc1, resume_rc=rc2)
+        if verbose:
+            print(f"[chaos] kill/resume replay: rc={rc1}/{rc2}")
+    return ok
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller graph / fewer simulations (CI)")
+    ap.add_argument("--no-serve", action="store_true",
+                    help="skip the in-process serve replay section")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write the merged fault report JSON here "
+                         "(the CI FAULT_report.json artifact)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    kw = (dict(n=256, theta=1024, num_sims=32) if args.fast
+          else dict(n=512, theta=2048, num_sims=64))
+    report = run_gate(seed=args.seed, **kw)
+    if not args.no_serve:
+        run_serve_replays(report)
+    ok = report.ok
+    if args.json:
+        report.write(args.json)
+        print(f"[chaos] report -> {args.json}")
+    failed = [c["name"] for c in report.checks if not c["pass"]]
+    print(f"[chaos] {'PASS' if ok else 'FAIL'} "
+          f"({len(report.checks)} checks"
+          + (f"; failed: {failed}" if failed else "") + ")")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

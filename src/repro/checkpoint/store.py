@@ -27,6 +27,9 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.runtime.faults import (FaultPlan, InjectedFault,
+                                  fire as _fire_fault)
+
 
 def _flatten(tree):
     leaves, treedef = jax.tree.flatten(tree)
@@ -34,9 +37,11 @@ def _flatten(tree):
 
 
 class CheckpointStore:
-    def __init__(self, root: str, keep: int = 3):
+    def __init__(self, root: str, keep: int = 3,
+                 fault_plan: Optional[FaultPlan] = None):
         self.root = root
         self.keep = keep
+        self.fault_plan = fault_plan
         os.makedirs(root, exist_ok=True)
         self._q: "queue.Queue" = queue.Queue(maxsize=2)
         self._worker = threading.Thread(target=self._writer_loop,
@@ -47,19 +52,29 @@ class CheckpointStore:
     # ------------------------- write path -------------------------
 
     def save(self, step: int, tree: Any, blocking: bool = False):
-        """Snapshot (device_get) and enqueue for background write."""
+        """Snapshot (device_get) and enqueue for background write.
+
+        A blocking save also surfaces any writer error — including the
+        one from THIS write — instead of deferring it to the next
+        call: a recovery snapshot must not fail silently."""
         if self._error:
             raise self._error
         leaves, treedef = _flatten(tree)
         host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
         self._q.put((step, host_leaves, treedef))
         if blocking:
-            self._q.join()
+            self.wait()
 
     def wait(self):
         self._q.join()
         if self._error:
             raise self._error
+
+    def clear_error(self):
+        """Acknowledge a surfaced writer error so the store can be
+        reused (the recovery path retries the failed snapshot)."""
+        err, self._error = self._error, None
+        return err
 
     def _writer_loop(self):
         while True:
@@ -72,6 +87,13 @@ class CheckpointStore:
                 self._q.task_done()
 
     def _write(self, step: int, leaves, treedef):
+        # Injection site: a fired write_fail/raise spec fails this
+        # write BEFORE the tmp dir exists, so no partial step is ever
+        # published (atomic-rename publish keeps restore safe).
+        spec = _fire_fault(self.fault_plan, "checkpoint.write",
+                           step=step)
+        if spec is not None and spec.kind == "write_fail":
+            raise InjectedFault("checkpoint.write", spec.kind, spec.at)
         tmp = os.path.join(self.root, f"step_{step:09d}.tmp")
         final = os.path.join(self.root, f"step_{step:09d}")
         os.makedirs(tmp, exist_ok=True)

@@ -111,7 +111,8 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
                 solver: str | None = None,
                 sampler: str | None = None, fwd=None,
                 coin_chunk: int = 32, gather: str = "auto",
-                block_v: int | None = None):
+                block_v: int | None = None,
+                survivors=None):
     """Build the jittable distributed round fn(nbr, prob, wt, key).
 
     The graph (padded reverse adjacency [n_pad, d]) is replicated on
@@ -179,6 +180,18 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
                  (EXPERIMENTS.md §Perf).  ``est_rrr_len`` sizes the
                  buckets (x2 safety); overflow pairs are dropped and
                  counted (quality effect = slightly smaller theta).
+
+    survivors: optional iterable of surviving machine ids — the
+    partition-loss-tolerant merge (paper Thm 3.1: the RandGreedi
+    guarantee is m-independent, so losing a partition degrades theta,
+    not correctness).  Dead machines' sender payloads are masked out
+    receiver-side (ids -> -1, rejected unconditionally by the bucket
+    insert; rows -> 0) and their local/receiver solutions are excluded
+    from the best-of merge, so a lost partition's data cannot reach
+    the answer.  None (or all ids) = the unmasked round.  The
+    single-controller twin is ``randgreedi_maxcover(survivors=...)``;
+    the host-level failure detection that produces this mask lives in
+    ``repro.runtime.faults.resilient_randgreedi``.
     """
     if isinstance(chunk_size, str) and chunk_size != "auto":
         raise ValueError(
@@ -203,6 +216,7 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
     # True value routes through the deprecated-alias path (and warns);
     # it keeps kernelizing the S4 receiver either way.
     solver = maxcover.resolve_solver(solver, use_kernel or None)
+    from repro.core.randgreedi import _normalize_survivors
     from repro.core.rrr import (rrr_batch, rrr_batch_packed,
                                 resolve_sampler)
     from repro.kernels import vmem_budget
@@ -220,6 +234,7 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
         expand = "kernel" if sampler == "kernel" else "jax"
     axes = tuple(axes)
     m = _axis_size(mesh, axes)
+    survivors = _normalize_survivors(survivors, m)
     n_pad = ((n + m - 1) // m) * m
     per = n_pad // m
     theta_local = ((theta // m + 31) // 32) * 32
@@ -345,11 +360,26 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
         sol = maxcover.greedy_maxcover(x_s, k, solver=solver)
         local_ids = jnp.where(
             sol.seeds >= 0, perm[pid * per + jnp.clip(sol.seeds, 0)], -1)
+        local_cov = sol.coverage
+        gain0 = sol.gains[0].astype(jnp.float32)
+        if survivors is not None:
+            # Partition-loss-tolerant masking: a dead machine's sender
+            # payload is rejected receiver-side (ids -> -1, zero rows)
+            # and its local/receiver solutions drop out of the merge,
+            # so a lost partition's data cannot reach the answer.
+            alive_vec = jnp.zeros((m,), bool).at[
+                jnp.asarray(survivors)].set(True)
+            alive = alive_vec[pid]
+            local_ids = jnp.where(alive, local_ids, -1)
+            local_cov = jnp.where(alive, local_cov, -1)
+            gain0 = jnp.where(alive, gain0, 0.0)
         sent_ids = local_ids[:kk]
-        sent_rows = sol.rows[:kk]
+        sent_rows = (sol.rows[:kk] if survivors is None
+                     else jnp.where(alive, sol.rows[:kk], 0))
 
-        # l for the bucket thresholds: global max singleton gain.
-        lower = lax.pmax(sol.gains[0].astype(jnp.float32), axes)
+        # l for the bucket thresholds: global max singleton gain
+        # (surviving senders only — dead ones contribute nothing).
+        lower = lax.pmax(gain0, axes)
 
         # --- S4: streaming receiver (replicated) ---
         state = streaming.init_state(k, delta, lower, sol.rows.shape[1])
@@ -411,15 +441,18 @@ def build_round(mesh, axes: Sequence[str], *, n: int, theta: int, k: int,
         g_seeds, g_cov = streaming.finalize(state)
 
         # best receiver across devices (identical under "gather";
-        # order-diverse under "pipeline" -> keep the best).
+        # order-diverse under "pipeline" -> keep the best).  Dead
+        # machines' receiver copies are excluded like their senders.
         g_cov_all = lax.all_gather(g_cov, axes, tiled=False)       # [m]
         g_seeds_all = lax.all_gather(g_seeds, axes, tiled=False)   # [m, k]
+        if survivors is not None:
+            g_cov_all = jnp.where(alive_vec, g_cov_all, -1)
         g_best = jnp.argmax(g_cov_all)
         g_cov_best = g_cov_all[g_best]
         g_seeds_best = g_seeds_all[g_best]
 
         # best local solution (paper Alg. 4 lines 5-6)
-        lc_all = lax.all_gather(sol.coverage, axes, tiled=False)   # [m]
+        lc_all = lax.all_gather(local_cov, axes, tiled=False)      # [m]
         lids_all = lax.all_gather(local_ids, axes, tiled=False)    # [m, k]
         l_best = jnp.argmax(lc_all)
         take_global = g_cov_best >= lc_all[l_best]

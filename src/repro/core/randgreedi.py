@@ -18,6 +18,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import bitset, maxcover, streaming
 
@@ -39,11 +40,38 @@ def partition_permutation(n: int, key) -> jnp.ndarray:
     return jax.random.permutation(key, n)
 
 
+def partition_blocks(n: int, m: int, key) -> np.ndarray:
+    """The host-visible [m, per] partition assignment of
+    :func:`randgreedi_maxcover` for ``(n, m, key)`` — machine j's block
+    is row j.  The resilient round (``repro.runtime.faults``) and the
+    chaos gate use it to probe / corrupt individual partitions."""
+    perm = np.asarray(partition_permutation(n, key))
+    per = n // m
+    return perm[:per * m].reshape(m, per)
+
+
+def _normalize_survivors(survivors, m: int):
+    """Validate and canonicalize a survivors mask: a sorted tuple of
+    unique machine ids in [0, m), or None for all-alive."""
+    if survivors is None:
+        return None
+    surv = tuple(sorted({int(j) for j in survivors}))
+    if not surv:
+        raise ValueError("survivors must name at least one machine")
+    if surv[0] < 0 or surv[-1] >= m:
+        raise ValueError(
+            f"survivor ids must be in [0, {m}), got {surv}")
+    if len(surv) == m:
+        return None  # all alive — identical to the unmasked path
+    return surv
+
+
 def randgreedi_maxcover(rows: jnp.ndarray, key, *, m: int, k: int,
                         aggregator: str = "streaming", delta: float = 0.077,
                         alpha_trunc: float = 1.0,
                         use_kernel: bool = False,
-                        solver: str | None = None) -> RandGreediResult:
+                        solver: str | None = None,
+                        survivors=None) -> RandGreediResult:
     """RandGreedi max-k-cover over uint32 rows [n, W].
 
     aggregator: "greedy" (offline lazy-greedy equivalent, Alg. 4 line 4)
@@ -57,6 +85,16 @@ def randgreedi_maxcover(rows: jnp.ndarray, key, *, m: int, k: int,
       ``use_kernel`` also still routes the streaming aggregator through
       its fused receiver kernel.
 
+    survivors: optional iterable of surviving machine ids — the
+      partition-loss-tolerant merge.  The partition assignment depends
+      only on ``(n, m, key)`` (see :func:`partition_blocks`); with a
+      survivors mask, only the surviving machines' blocks enter the
+      local solves and the aggregation, so the result is bit-identical
+      to running the round on those m' machines from scratch AND is
+      independent of the lost partitions' row data (RandGreedi Thm 3.1
+      m-independence, made executable — the chaos gate corrupts a
+      dropped partition's rows and asserts bit-equality).
+
     Un-jitted shim (like ``maxcover.greedy_maxcover``): the solver —
     and the ``use_kernel`` DeprecationWarning, when the alias decides
     it — resolves eagerly on every call, pointing at the caller, then
@@ -65,21 +103,29 @@ def randgreedi_maxcover(rows: jnp.ndarray, key, *, m: int, k: int,
     return _randgreedi_maxcover(
         rows, key, m=m, k=k, aggregator=aggregator, delta=delta,
         alpha_trunc=alpha_trunc, use_kernel=use_kernel,
-        solver=maxcover.resolve_solver(solver, use_kernel or None))
+        solver=maxcover.resolve_solver(solver, use_kernel or None),
+        survivors=_normalize_survivors(survivors, m))
 
 
 @functools.partial(jax.jit, static_argnames=(
     "m", "k", "aggregator", "delta", "alpha_trunc", "use_kernel",
-    "solver"))
+    "solver", "survivors"))
 def _randgreedi_maxcover(rows: jnp.ndarray, key, *, m: int, k: int,
                          aggregator: str, delta: float,
                          alpha_trunc: float, use_kernel: bool,
-                         solver: str) -> RandGreediResult:
+                         solver: str,
+                         survivors=None) -> RandGreediResult:
     n, w = rows.shape
     perm = partition_permutation(n, key)
     per = n // m  # vertices per machine (n padded by caller if needed)
     assign = perm[:per * m].reshape(m, per)        # [m, per] global ids
-    local_rows = rows[assign]                      # [m, per, W]
+    if survivors is not None:
+        # Partition-loss-tolerant merge: only surviving machines'
+        # blocks are solved and aggregated (static gather — survivors
+        # is a static tuple), exactly as if the round ran on the m'
+        # survivors from scratch.
+        assign = assign[jnp.asarray(survivors)]    # [m', per]
+    local_rows = rows[assign]                      # [m', per, W]
 
     # --- local greedy on each machine (vmapped = "in parallel") ---
     local = jax.vmap(

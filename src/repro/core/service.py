@@ -51,16 +51,21 @@ query.
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Optional, Sequence, Tuple
+import time
+from typing import Callable, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitset, maxcover, opim
+from repro.core.cascade import MODELS as _MODELS
 from repro.graphs.csr import (CSRGraph, padded_adjacency,
                               padded_forward_adjacency)
+from repro.core.rrr import SAMPLERS as _SAMPLERS
 from repro.core.rrr import resolve_sampler, sample_incidence
+from repro.runtime.faults import (FaultPlan, InjectedFault,
+                                  fire as _fire_fault)
 
 
 # Static contract (proved by repro.analysis on a canonical fixture):
@@ -119,6 +124,9 @@ class Answer(NamedTuple):
     guarantee: float        # sigma_lower / sigma_upper
     certified: bool         # admission rule satisfied at this theta
     generation: int         # pool generation that answered
+    degraded: bool = False  # serve() gave up (deadline / max_theta)
+    #   before certification — the answer still carries its honest
+    #   ``opim.certify`` lower bound (sigma_lower / guarantee above).
 
 
 class SketchPool(NamedTuple):
@@ -157,10 +165,14 @@ def _round_to_slabs(theta: int, slab: int) -> int:
 
 def _sample_slabs(g: CSRGraph, key, slabs: Sequence[Tuple[int, int]],
                   *, slab: int, model: str, sampler: str,
-                  coin_chunk: int, max_steps: int):
+                  coin_chunk: int, max_steps: int,
+                  plan: Optional[FaultPlan] = None):
     """Sample [n, slab/32] incidence blocks for each (slab_index, salt)
     of both halves.  Returns (blocks1, blocks2) lists aligned with
-    ``slabs``."""
+    ``slabs``.  Each slab fill is a ``sampler.slab_fill`` injection
+    site of ``plan`` — the fill is a pure function of (key, slab,
+    salt), so an injected raise aborted pool build can simply be
+    retried."""
     n = g.num_vertices
     nbr, prob, wt = padded_adjacency(g)
     fwd = padded_forward_adjacency(g) if sampler != "dense" else None
@@ -168,6 +180,8 @@ def _sample_slabs(g: CSRGraph, key, slabs: Sequence[Tuple[int, int]],
     for half in (0, 1):
         kh = jax.random.fold_in(key, half)
         for (s, salt) in slabs:
+            _fire_fault(plan, "sampler.slab_fill", half=half, slab=s,
+                        salt=salt)
             ks = jax.random.fold_in(jax.random.fold_in(kh, s), salt)
             out[half].append(sample_incidence(
                 nbr, prob, wt, ks, theta=slab, n=n, model=model,
@@ -178,7 +192,8 @@ def _sample_slabs(g: CSRGraph, key, slabs: Sequence[Tuple[int, int]],
 
 def make_pool(g: CSRGraph, key, *, theta: int = 0, slab: int = 256,
               model: str = "IC", sampler: str = "dense",
-              coin_chunk: int = 32, max_steps: int = 32) -> SketchPool:
+              coin_chunk: int = 32, max_steps: int = 32,
+              plan: Optional[FaultPlan] = None) -> SketchPool:
     """Create a pool with ``theta`` samples per half (rounded up to
     whole slabs; 0 = empty pool — the first ``refresh`` fills it)."""
     if slab % bitset.WORD_BITS != 0 or slab < bitset.WORD_BITS:
@@ -197,7 +212,7 @@ def make_pool(g: CSRGraph, key, *, theta: int = 0, slab: int = 256,
     blocks1, blocks2 = _sample_slabs(
         g, key, [(s, 0) for s in range(num_slabs)], slab=slab,
         model=model, sampler=sampler, coin_chunk=coin_chunk,
-        max_steps=max_steps)
+        max_steps=max_steps, plan=plan)
     r1 = jnp.concatenate(blocks1, axis=1)[:, :w]
     r2 = jnp.concatenate(blocks2, axis=1)[:, :w]
     return SketchPool(g, r1, r2, theta, 0,
@@ -206,7 +221,8 @@ def make_pool(g: CSRGraph, key, *, theta: int = 0, slab: int = 256,
 
 
 def refresh(pool: SketchPool, new_theta: Optional[int] = None,
-            *, max_theta: int = 1 << 20) -> SketchPool:
+            *, max_theta: int = 1 << 20,
+            plan: Optional[FaultPlan] = None) -> SketchPool:
     """Grow the pool to ``new_theta`` samples per half (default:
     double, at least one slab), appending new slabs salted with the new
     generation — existing columns are carried over bit-identically.
@@ -225,7 +241,7 @@ def refresh(pool: SketchPool, new_theta: Optional[int] = None,
     blocks1, blocks2 = _sample_slabs(
         pool.g, pool.key, [(s, gen) for s in range(old_slabs, num_slabs)],
         slab=pool.slab, model=pool.model, sampler=pool.sampler,
-        coin_chunk=pool.coin_chunk, max_steps=pool.max_steps)
+        coin_chunk=pool.coin_chunk, max_steps=pool.max_steps, plan=plan)
     r1 = jnp.concatenate([pool.r1] + blocks1, axis=1)
     r2 = jnp.concatenate([pool.r2] + blocks2, axis=1)
     salt = np.concatenate([pool.salt,
@@ -253,8 +269,8 @@ def affected_slabs(pool: SketchPool, touched) -> np.ndarray:
     return np.nonzero(per_slab)[0]
 
 
-def refresh_mutated(pool: SketchPool, g_new: CSRGraph,
-                    touched) -> SketchPool:
+def refresh_mutated(pool: SketchPool, g_new: CSRGraph, touched,
+                    *, plan: Optional[FaultPlan] = None) -> SketchPool:
     """Apply a graph mutation incrementally: resample only the slabs
     whose samples contain a ``touched`` vertex (an in-edge-list head
     of an inserted/deleted/re-weighted edge), on the NEW graph with a
@@ -270,7 +286,7 @@ def refresh_mutated(pool: SketchPool, g_new: CSRGraph,
     blocks1, blocks2 = _sample_slabs(
         g_new, pool.key, [(int(s), gen) for s in stale], slab=pool.slab,
         model=pool.model, sampler=pool.sampler,
-        coin_chunk=pool.coin_chunk, max_steps=pool.max_steps)
+        coin_chunk=pool.coin_chunk, max_steps=pool.max_steps, plan=plan)
     wps = pool.slab // bitset.WORD_BITS
     r1, r2 = np.asarray(pool.r1).copy(), np.asarray(pool.r2).copy()
     salt = pool.salt.copy()
@@ -280,6 +296,104 @@ def refresh_mutated(pool: SketchPool, g_new: CSRGraph,
         salt[s] = gen
     return pool._replace(g=g_new, r1=jnp.asarray(r1), r2=jnp.asarray(r2),
                          generation=gen, salt=salt)
+
+
+# ---------------------------------------------------------------------
+# Pool snapshot / restore (service recovery via checkpoint.store)
+# ---------------------------------------------------------------------
+
+# The static pool fields are encoded as small-int codes in a fixed
+# int64 scalars leaf so the snapshot tree has a FIXED structure
+# (CheckpointStore.restore matches leaf-for-leaf against a template):
+#   [theta, generation, slab, coin_chunk, max_steps,
+#    model_code, sampler_code, typed_key_flag]
+_POOL_SCALARS = 8
+
+
+def pool_state(pool: SketchPool) -> dict:
+    """The checkpointable state of a pool: 5 array leaves (key data,
+    both OPIM halves, slab salts, static scalars).  The graph is NOT
+    included — it is the service's configuration, supplied again at
+    :func:`pool_from_state` time.  ``pool_from_state(g, pool_state(p))``
+    reconstructs ``p`` bit-for-bit (same samples, same salts, same
+    PRNG key for future refreshes)."""
+    key = pool.key
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key_data, typed = jax.random.key_data(key), 1
+    else:
+        key_data, typed = key, 0  # legacy uint32 [2] PRNGKey
+    try:
+        model_code = _MODELS.index(pool.model)
+        sampler_code = _SAMPLERS.index(pool.sampler)
+    except ValueError:
+        raise ValueError(
+            f"cannot snapshot pool with model={pool.model!r} / "
+            f"sampler={pool.sampler!r}; known models {_MODELS}, "
+            f"samplers {_SAMPLERS}") from None
+    scalars = np.asarray(
+        [pool.theta, pool.generation, pool.slab, pool.coin_chunk,
+         pool.max_steps, model_code, sampler_code, typed], np.int64)
+    return {
+        "key": np.asarray(key_data, np.uint32),
+        "r1": pool.r1,
+        "r2": pool.r2,
+        "salt": np.asarray(pool.salt, np.int32),
+        "scalars": scalars,
+    }
+
+
+def pool_template(g: CSRGraph) -> dict:
+    """A structural template for :meth:`CheckpointStore.restore` —
+    shapes/dtypes are placeholders (restore only matches the tree
+    structure; real shapes come from the checkpoint files)."""
+    del g  # structure is graph-independent; kept for call symmetry
+    z = np.zeros((0,), np.uint32)
+    return {"key": z, "r1": z, "r2": z,
+            "salt": np.zeros((0,), np.int32),
+            "scalars": np.zeros((_POOL_SCALARS,), np.int64)}
+
+
+def pool_from_state(g: CSRGraph, state: dict) -> SketchPool:
+    """Rebuild a :class:`SketchPool` from :func:`pool_state` output
+    (possibly round-tripped through a :class:`CheckpointStore`)."""
+    sc = [int(x) for x in np.asarray(state["scalars"]).reshape(-1)]
+    if len(sc) != _POOL_SCALARS:
+        raise ValueError(f"pool snapshot scalars must have "
+                         f"{_POOL_SCALARS} entries, got {len(sc)}")
+    (theta, gen, slab, coin_chunk, max_steps,
+     model_code, sampler_code, typed) = sc
+    key = jnp.asarray(np.asarray(state["key"]).astype(np.uint32))
+    if typed:
+        key = jax.random.wrap_key_data(key)
+    n, w = g.num_vertices, bitset.num_words(theta)
+    r1 = jnp.asarray(state["r1"], bitset.WORD_DTYPE).reshape(n, w)
+    r2 = jnp.asarray(state["r2"], bitset.WORD_DTYPE).reshape(n, w)
+    salt = np.asarray(state["salt"], np.int32).reshape(
+        theta // slab if theta else 0)
+    return SketchPool(g, r1, r2, theta, gen, salt, key, slab,
+                      _MODELS[model_code], _SAMPLERS[sampler_code],
+                      coin_chunk, max_steps)
+
+
+def snapshot_pool(store, pool: SketchPool, *, step: Optional[int] = None,
+                  blocking: bool = True) -> int:
+    """Write the pool to a :class:`~repro.checkpoint.store.CheckpointStore`
+    (default step = the pool generation) and return the step written.
+    Blocking by default: a recovery snapshot that silently failed is
+    worse than a slow one."""
+    step = pool.generation if step is None else step
+    store.save(step, pool_state(pool), blocking=blocking)
+    return step
+
+
+def restore_pool(store, g: CSRGraph, *,
+                 step: Optional[int] = None):
+    """Load the newest (or requested) pool snapshot.  Returns
+    ``(pool, step)`` or ``(None, -1)`` when the store is empty."""
+    tree, got = store.restore(pool_template(g), step=step)
+    if tree is None:
+        return None, -1
+    return pool_from_state(g, tree), got
 
 
 # ---------------------------------------------------------------------
@@ -453,19 +567,48 @@ class InfluenceService:
                  solver: str = "resident", model: str = "IC",
                  sampler: str = "dense", coin_chunk: int = 32,
                  max_steps: int = 32, delta: float = 1.0 / 128.0,
-                 alpha: Optional[float] = None):
+                 alpha: Optional[float] = None,
+                 fault_plan: Optional[FaultPlan] = None):
+        self._configure(solver=solver, theta0=theta0,
+                        max_theta=max_theta, slab=slab, delta=delta,
+                        alpha=alpha, fault_plan=fault_plan)
+        pool = make_pool(g, key, theta=0, slab=slab, model=model,
+                         sampler=sampler, coin_chunk=coin_chunk,
+                         max_steps=max_steps, plan=fault_plan)
+        self._pools: dict[int, SketchPool] = {0: pool}
+        self._inflight: dict[int, int] = {0: 0}
+        self._gen = 0
+
+    def _configure(self, *, solver, theta0, max_theta, slab, delta,
+                   alpha, fault_plan):
         maxcover.resolve_solver(solver)
         self.solver = solver
         self.theta0 = _round_to_slabs(max(theta0, slab), slab)
         self.max_theta = _round_to_slabs(max_theta, slab)
         self.delta = delta
         self.alpha = alpha if alpha is not None else 1.0 - 1.0 / math.e
-        pool = make_pool(g, key, theta=0, slab=slab, model=model,
-                         sampler=sampler, coin_chunk=coin_chunk,
-                         max_steps=max_steps)
-        self._pools: dict[int, SketchPool] = {0: pool}
-        self._inflight: dict[int, int] = {0: 0}
-        self._gen = 0
+        self.fault_plan = fault_plan
+
+    @classmethod
+    def from_pool(cls, pool: SketchPool, *, theta0: int = 512,
+                  max_theta: int = 1 << 14, solver: str = "resident",
+                  delta: float = 1.0 / 128.0,
+                  alpha: Optional[float] = None,
+                  fault_plan: Optional[FaultPlan] = None
+                  ) -> "InfluenceService":
+        """Rebuild a service around a restored pool (see
+        :func:`restore_pool`) — the recovery path of the supervised
+        serve replay.  The service resumes at the pool's generation;
+        future refreshes continue the same salted-slab PRNG stream, so
+        a recovered service is bit-identical to one that never died."""
+        svc = cls.__new__(cls)
+        svc._configure(solver=solver, theta0=theta0,
+                       max_theta=max_theta, slab=pool.slab, delta=delta,
+                       alpha=alpha, fault_plan=fault_plan)
+        svc._pools = {pool.generation: pool}
+        svc._inflight = {pool.generation: 0}
+        svc._gen = pool.generation
+        return svc
 
     @property
     def generation(self) -> int:
@@ -501,12 +644,14 @@ class InfluenceService:
         if new_theta is None:
             new_theta = self.theta0 if pool.theta == 0 else min(
                 pool.theta * 2, self.max_theta)
-        self._install(refresh(pool, new_theta, max_theta=self.max_theta))
+        self._install(refresh(pool, new_theta, max_theta=self.max_theta,
+                              plan=self.fault_plan))
 
     def mutate(self, g_new: CSRGraph, touched):
         """Incremental refresh after a graph mutation (``touched`` =
         heads of inserted/deleted/re-weighted edges)."""
-        self._install(refresh_mutated(self.pool, g_new, touched))
+        self._install(refresh_mutated(self.pool, g_new, touched,
+                                      plan=self.fault_plan))
 
     # -- admission / answering ---------------------------------------
 
@@ -520,16 +665,34 @@ class InfluenceService:
         if query.budget is not None and query.budget > self.pool.n:
             raise ValueError(f"budget {query.budget} exceeds the vertex "
                              f"count {self.pool.n}")
+        _fire_fault(self.fault_plan, "service.admit", k=query.k,
+                    generation=self._gen)
         if self.pool.theta == 0:
             self.refresh()
         self._inflight[self._gen] += 1
         return Ticket(self._gen, query)
 
+    def release(self, tickets: Sequence[Ticket]):
+        """Abandon admitted tickets without answering them (the
+        retry path re-admits on the current generation) so their old
+        generations can drain and retire."""
+        for t in tickets:
+            if t.generation in self._inflight:
+                self._inflight[t.generation] = max(
+                    0, self._inflight[t.generation] - 1)
+        self._retire_drained()
+
     def answer(self, tickets: Sequence[Ticket]) -> list[Answer]:
         """Answer a batch of tickets; tickets sharing a generation are
         answered by one vmapped solve against that generation's pool
         (stale generations raise, draining ones complete).  Returns
-        answers in ticket order."""
+        answers in ticket order.
+
+        Both failure modes raise BEFORE any in-flight count is
+        consumed, so the batch can be retried/re-admitted whole (see
+        :func:`answer_with_retry`)."""
+        _fire_fault(self.fault_plan, "service.answer",
+                    batch=len(tickets))
         for t in tickets:
             if t.generation not in self._pools:
                 raise StaleGenerationError(
@@ -549,19 +712,73 @@ class InfluenceService:
         self._retire_drained()
         return out  # type: ignore[return-value]
 
-    def serve(self, queries: Sequence[Query]) -> list[Answer]:
+    def serve(self, queries: Sequence[Query], *,
+              deadline_s: Optional[float] = None,
+              clock: Callable[[], float] = time.monotonic
+              ) -> list[Answer]:
         """Admission loop: answer the batch, then re-admit any
         uncertified query against refreshed (theta-doubled)
         generations until its certificate clears or ``max_theta`` is
-        reached (the amortized OPIM-C doubling loop)."""
+        reached (the amortized OPIM-C doubling loop).
+
+        ``deadline_s`` bounds the wall-clock spent doubling: when the
+        deadline (or ``max_theta``) cuts the loop short, the
+        still-uncertified answers are returned marked
+        ``degraded=True`` — each carries its honest ``opim.certify``
+        lower bound (``sigma_lower`` / ``guarantee``) at the theta it
+        reached, instead of the loop spinning or raising."""
+        start = clock()
         tickets = [self.admit(q) for q in queries]
         answers = self.answer(tickets)
         while True:
             retry = [i for i, a in enumerate(answers)
                      if not a.certified]
-            if not retry or self.pool.theta >= self.max_theta:
+            if not retry:
+                return answers
+            out_of_time = (deadline_s is not None
+                           and clock() - start >= deadline_s)
+            if self.pool.theta >= self.max_theta or out_of_time:
+                for i in retry:
+                    answers[i] = answers[i]._replace(degraded=True)
                 return answers
             self.refresh()
             redo = self.answer([self.admit(queries[i]) for i in retry])
             for i, a in zip(retry, redo):
                 answers[i] = a
+
+
+def answer_with_retry(service: InfluenceService,
+                      tickets: Sequence[Ticket], *, retries: int = 3,
+                      backoff_s: float = 0.0,
+                      sleep_fn: Callable[[float], None] = time.sleep
+                      ) -> list[Answer]:
+    """``service.answer`` with bounded retry:
+
+    * :class:`StaleGenerationError` (a concurrent refresh retired a
+      ticket's generation between admit and answer) — release the
+      surviving tickets and re-admit every query on the CURRENT
+      generation, then retry;
+    * :class:`InjectedFault` (a transient injected failure at the
+      ``service.answer`` site) — plain retry: the plan's occurrence
+      counter has advanced, and ``answer`` raises before consuming any
+      in-flight count, so the retry is exact.
+
+    Exponential backoff ``backoff_s * 2**(attempt-1)`` through the
+    injectable ``sleep_fn`` (tests pass a recorder, never a real
+    sleep).  Re-raises the last error when the budget is exhausted.
+    """
+    tickets = list(tickets)
+    last: Optional[Exception] = None
+    for attempt in range(retries + 1):
+        if attempt and backoff_s:
+            sleep_fn(backoff_s * (2 ** (attempt - 1)))
+        try:
+            return service.answer(tickets)
+        except StaleGenerationError as e:
+            last = e
+            service.release([t for t in tickets
+                             if t.generation in service._pools])
+            tickets = [service.admit(t.query) for t in tickets]
+        except InjectedFault as e:
+            last = e
+    raise last  # type: ignore[misc]

@@ -12,6 +12,7 @@ behaviour (the benchmarks do this via subprocesses).
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 import warnings
 
@@ -23,6 +24,7 @@ from repro.core.diffusion import influence
 from repro.graphs import generators
 from repro.graphs.csr import padded_adjacency, padded_forward_adjacency
 from repro.launch.mesh import make_host_mesh
+from repro.runtime import faults
 
 
 def _coin_chunk_arg(text: str) -> int:
@@ -187,8 +189,25 @@ def main(argv=None):
                          "online serving replay (resident sketch pool "
                          "+ batched queries; see repro.launch.serve) "
                          "on the same graph/model/solver flags")
+    ap.add_argument("--faults", action="append", default=[],
+                    type=faults.cli_fault_arg,
+                    metavar="SITE:KIND[:AT[:ARG]]",
+                    help="run the fault-injected resilient round "
+                         "(single-controller RandGreedi with a "
+                         "survivors-mask merge) under these fault "
+                         "specs; at site local.greedy the occurrence "
+                         "index is the machine id (e.g. "
+                         "'local.greedy:drop:1' loses machine 1, "
+                         "'local.greedy:delay:2:0.1' makes machine 2 "
+                         "a straggler). Repeatable.")
+    ap.add_argument("--fault-report", default=None, metavar="PATH",
+                    help="write the JSON fault report (fired events + "
+                         "checks) of the --faults round to PATH")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.fault_report and not args.faults:
+        ap.error("--fault-report needs --faults (the resilient round "
+                 "is what produces the report)")
     if args.serve:
         from repro.launch import serve
         return serve.main([
@@ -208,6 +227,8 @@ def main(argv=None):
     solver = args.solver or ("fused" if args.use_kernel else "scan")
 
     g = make_graph(args.graph, args.n, args.avg_deg, args.seed)
+    if args.faults:
+        return _main_faulted(args, g, solver)
     n = g.num_vertices
     key = jax.random.key(args.seed)
     print(f"[im] graph n={n} m={g.num_edges} model={args.model} "
@@ -293,6 +314,67 @@ def main(argv=None):
     print(f"[im] k={k_real} expected influence = {spread:.1f} "
           f"({100 * spread / n:.2f}% of graph) in {elapsed:.2f}s; "
           f"worst-case ratio {ratio:.3f}")
+    return 0
+
+
+def _main_faulted(args, g, solver: str) -> int:
+    """The --faults path: one fixed-theta single-controller RandGreedi
+    round driven through :func:`repro.runtime.faults.resilient_randgreedi`
+    — injected machine failures become a survivors-mask merge
+    (bit-identical to an m'-machine round from scratch, Thm 3.1),
+    injected stragglers shrink the §3.3.2 truncation knob through the
+    StragglerMonitor."""
+    from repro.core import rrr
+    from repro.runtime.fault_tolerance import StragglerMonitor
+
+    n = g.num_vertices
+    m = args.machines or len(jax.devices())
+    theta = args.theta or 1024
+    key = jax.random.key(args.seed)
+    nbr, prob, wt = padded_adjacency(g)
+    fwd = (padded_forward_adjacency(g)
+           if args.sampler != "dense" else None)
+    rows = rrr.sample_incidence(
+        nbr, prob, wt, jax.random.fold_in(key, 1), theta=theta, n=n,
+        model=args.model, sampler=args.sampler, fwd=fwd,
+        coin_chunk=args.coin_chunk)
+    plan = faults.FaultPlan(args.faults)
+    monitor = StragglerMonitor()
+    alpha0 = args.alpha if "trunc" in args.selector else 1.0
+    print(f"[im] resilient round: n={n} theta={theta} m={m} "
+          f"k={args.k} faults={len(plan.specs)}")
+    report = faults.FaultReport()
+    t0 = time.time()
+    try:
+        res, survivors, alpha_used = faults.resilient_randgreedi(
+            rows, jax.random.fold_in(key, 2), m=m, k=args.k,
+            plan=plan, monitor=monitor, delta=args.delta,
+            alpha_trunc=alpha0, solver=solver)
+    except faults.PartitionsLostError as e:
+        print(f"[im] FATAL: {e}", file=sys.stderr)
+        report.add_events(plan)
+        report.check("round_survived", False, error=str(e))
+        if args.fault_report:
+            report.write(args.fault_report)
+        return 1
+    elapsed = time.time() - t0
+    seeds = np.asarray(res.seeds)
+    spread = float(influence(g, seeds, jax.random.fold_in(key, 99),
+                             model=args.model, num_sims=args.eval_sims,
+                             engine=args.eval_engine))
+    lost = m - len(survivors)
+    print(f"[im] survivors={len(survivors)}/{m} (lost {lost}) "
+          f"alpha={alpha0}->{alpha_used} "
+          f"coverage={int(res.coverage)} spread={spread:.1f} "
+          f"({100 * spread / n:.2f}% of graph) in {elapsed:.2f}s")
+    report.add_events(plan)
+    report.check("round_survived", True, survivors=len(survivors),
+                 lost=lost, coverage=int(res.coverage),
+                 spread=spread, alpha_used=alpha_used,
+                 straggler_flags=monitor.flags)
+    if args.fault_report:
+        report.write(args.fault_report)
+        print(f"[im] fault report -> {args.fault_report}")
     return 0
 
 

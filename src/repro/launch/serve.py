@@ -14,19 +14,39 @@ are bit-identical — the serve smoke gate CI runs.  ``--refresh-every``
 forces a pool refresh between batches so the replay also exercises the
 generation-drain path (tickets admitted before the refresh complete on
 their old generation's pool).
+
+Supervised replay (the CI ``chaos`` job)
+----------------------------------------
+``--recover`` switches to the supervised mode: the pool is
+snapshotted to a :class:`~repro.checkpoint.store.CheckpointStore`
+before every batch, faults from ``--inject site:kind[:at[:arg]]``
+specs fire deterministically mid-replay, and a fault that outlives
+the retry budget escalates to restore-from-snapshot + re-answer.
+``--kill-after N`` stops after N batches (a killed replay, snapshots
+left behind); ``--resume-from N`` restores the newest snapshot and
+resumes the trace at batch N.  With ``--check``, the faulty/resumed
+answers are compared bit-for-bit against a clean full replay of the
+same schedule; ``--fault-report`` writes the JSON artifact.
 """
 from __future__ import annotations
 
 import argparse
 import sys
+import tempfile
 import time
+from typing import Optional
 
 import jax
 import numpy as np
 
+from repro.checkpoint.store import CheckpointStore
 from repro.core import service as svc
-from repro.core.service import InfluenceService, Query
+from repro.core.service import (InfluenceService, Query,
+                                answer_with_retry, restore_pool,
+                                snapshot_pool)
 from repro.launch.im_driver import make_graph
+from repro.runtime import faults
+from repro.runtime.faults import FaultPlan, InjectedFault
 
 
 def make_trace(n: int, num_queries: int, seed: int,
@@ -95,6 +115,136 @@ def check_bit_identity(service: InfluenceService, pools: dict,
     return mismatches
 
 
+# ---------------------------------------------------------------------
+# Supervised replay: snapshot / inject / recover / resume
+# ---------------------------------------------------------------------
+
+def _snapshot_with_retry(store: CheckpointStore, pool, *, retries: int,
+                         backoff_s: float, sleep_fn) -> int:
+    """Blocking snapshot with bounded retry: an injected (or real)
+    write failure is acknowledged via ``clear_error`` and the write
+    retried — a recovery point must not fail silently."""
+    last: Optional[Exception] = None
+    for attempt in range(retries + 1):
+        if attempt and backoff_s:
+            sleep_fn(backoff_s * (2 ** (attempt - 1)))
+        try:
+            return snapshot_pool(store, pool)
+        except (InjectedFault, OSError) as e:
+            store.clear_error()
+            last = e
+    raise last  # type: ignore[misc]
+
+
+def _admit_with_retry(service: InfluenceService, queries, *,
+                      retries: int, backoff_s: float, sleep_fn):
+    """Admit a batch, releasing partial admissions and retrying on an
+    injected admit fault (the site fires before any in-flight count is
+    taken for the failing query, so a retry is exact)."""
+    last: Optional[Exception] = None
+    for attempt in range(retries + 1):
+        if attempt and backoff_s:
+            sleep_fn(backoff_s * (2 ** (attempt - 1)))
+        tickets = []
+        try:
+            for q in queries:
+                tickets.append(service.admit(q))
+            return tickets
+        except InjectedFault as e:
+            service.release(tickets)
+            last = e
+    raise last  # type: ignore[misc]
+
+
+def supervised_replay(g, key, trace: list[Query], *, batch: int,
+                      store: CheckpointStore,
+                      plan: Optional[FaultPlan] = None,
+                      refresh_every: int = 0, retries: int = 2,
+                      backoff_s: float = 0.0, sleep_fn=time.sleep,
+                      start_batch: int = 0, stop_after: int = 0,
+                      theta0: int = 512, max_theta: int = 1 << 12,
+                      slab: int = 256, solver: str = "resident",
+                      model: str = "IC", sampler: str = "dense"):
+    """Replay ``trace`` under supervision: snapshot before every
+    batch, retry transient faults, restore-from-snapshot when the
+    retry budget is exhausted.
+
+    The batch loop is ``refresh (scheduled) -> snapshot -> admit ->
+    answer``; with ``start_batch`` > 0 the newest snapshot (written by
+    the batch before the kill point) is restored and the loop resumes
+    mid-trace — because snapshots capture the full salted-slab PRNG
+    state, the remaining answers are bit-identical to an uninterrupted
+    replay (asserted by ``--check`` / the chaos gate).  ``stop_after``
+    bounds the number of batches processed (the "kill").
+
+    Returns ``(answers, service, stats)`` with
+    ``stats = {"recoveries": .., "batches": ..}``.
+    """
+    num_batches = (len(trace) + batch - 1) // batch
+    end = (min(num_batches, start_batch + stop_after) if stop_after
+           else num_batches)
+    if start_batch == 0:
+        service = InfluenceService(
+            g, key, theta0=theta0, max_theta=max_theta, slab=slab,
+            solver=solver, model=model, sampler=sampler,
+            fault_plan=plan)
+    else:
+        pool, step = restore_pool(store, g)
+        if pool is None:
+            raise FileNotFoundError(
+                f"--resume-from {start_batch} but no snapshot in "
+                f"{store.root}")
+        service = InfluenceService.from_pool(
+            pool, theta0=theta0, max_theta=max_theta, solver=solver,
+            fault_plan=plan)
+    answers: list = []
+    recoveries = 0
+    for bi in range(start_batch, end):
+        queries = trace[bi * batch:(bi + 1) * batch]
+        do_refresh = bool(refresh_every and bi
+                          and bi % refresh_every == 0)
+        for attempt in (0, 1):
+            try:
+                if do_refresh and service.pool.theta < service.max_theta:
+                    service.refresh()
+                do_refresh = False
+                if service.pool.theta:
+                    _snapshot_with_retry(store, service.pool,
+                                         retries=retries,
+                                         backoff_s=backoff_s,
+                                         sleep_fn=sleep_fn)
+                tickets = _admit_with_retry(service, queries,
+                                            retries=retries,
+                                            backoff_s=backoff_s,
+                                            sleep_fn=sleep_fn)
+                answers.extend(answer_with_retry(
+                    service, tickets, retries=retries,
+                    backoff_s=backoff_s, sleep_fn=sleep_fn))
+                break
+            except (InjectedFault, svc.StaleGenerationError):
+                # Retry budget exhausted -> escalate: rebuild the
+                # service from the newest snapshot and re-answer the
+                # batch (deterministic, so the recovered answers match
+                # the clean replay bit-for-bit).
+                if attempt:
+                    raise
+                pool, _ = restore_pool(store, g)
+                if pool is None:
+                    raise
+                service = InfluenceService.from_pool(
+                    pool, theta0=theta0, max_theta=max_theta,
+                    solver=solver, fault_plan=plan)
+                recoveries += 1
+    return answers, service, {"recoveries": recoveries,
+                              "batches": end - start_batch}
+
+
+def answers_equal(a, b) -> bool:
+    """Bit-identity of two :class:`~repro.core.service.Answer`s —
+    seeds arrays plus every scalar field (floats compared exactly)."""
+    return bool(np.array_equal(a.seeds, b.seeds) and a[1:] == b[1:])
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--graph", default="er", choices=("er", "ba", "rmat"))
@@ -120,17 +270,65 @@ def main(argv=None):
                     help="replay every query through the sequential "
                          "answer_one reference and exit non-zero on "
                          "any batched-vs-sequential mismatch (the CI "
-                         "serve smoke gate)")
+                         "serve smoke gate); with --recover, compare "
+                         "the supervised answers bit-for-bit against "
+                         "a clean full replay instead")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--inject", action="append", default=[],
+                    type=faults.cli_fault_arg,
+                    metavar="SITE:KIND[:AT[:ARG]]",
+                    help="inject a deterministic fault (repeatable); "
+                         f"sites: {', '.join(faults.SITES)}; kinds: "
+                         f"{', '.join(faults.FAULT_KINDS)}. "
+                         "Requires --recover.")
+    ap.add_argument("--recover", action="store_true",
+                    help="supervised replay: snapshot the pool before "
+                         "every batch and restore+re-answer when a "
+                         "fault outlives the retry budget")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory for --recover "
+                         "(default: a fresh temp dir)")
+    ap.add_argument("--kill-after", type=int, default=0,
+                    help="process only this many batches then stop — "
+                         "a killed replay; snapshots stay in "
+                         "--ckpt-dir for --resume-from")
+    ap.add_argument("--resume-from", type=int, default=0,
+                    help="restore the newest snapshot from --ckpt-dir "
+                         "and resume the trace at this batch index")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="per-stage retry budget in supervised mode")
+    ap.add_argument("--backoff", type=float, default=0.0,
+                    help="base retry backoff seconds (doubles per "
+                         "attempt)")
+    ap.add_argument("--fault-report", default=None, metavar="PATH",
+                    help="write the JSON fault report (fired events + "
+                         "named checks) to PATH")
     args = ap.parse_args(argv)
 
+    # Cross-flag validation at the argparse boundary (SystemExit 2
+    # with an actionable message, not a deep failure mid-replay).
+    if args.inject and not args.recover:
+        ap.error("--inject requires --recover (the supervised replay "
+                 "is what recovers from the injected faults)")
+    if (args.kill_after or args.resume_from) and not args.recover:
+        ap.error("--kill-after/--resume-from require --recover")
+    if args.kill_after < 0 or args.resume_from < 0:
+        ap.error("--kill-after/--resume-from must be >= 0")
+    if args.resume_from and not args.ckpt_dir:
+        ap.error("--resume-from needs --ckpt-dir (the directory the "
+                 "killed replay left its snapshots in)")
+    if args.retries < 0:
+        ap.error("--retries must be >= 0")
+
     g = make_graph(args.graph, args.n, args.avg_deg, args.seed)
+    trace = make_trace(g.num_vertices, args.queries, args.seed + 1,
+                       k_max=args.k_max)
+    if args.recover:
+        return _main_supervised(args, g, trace)
     service = InfluenceService(
         g, jax.random.PRNGKey(args.seed), theta0=args.theta0,
         max_theta=args.max_theta, slab=args.slab, solver=args.solver,
         model=args.model, sampler=args.sampler)
-    trace = make_trace(g.num_vertices, args.queries, args.seed + 1,
-                       k_max=args.k_max)
     print(f"[serve] graph n={g.num_vertices} m={g.num_edges} "
           f"solver={args.solver} trace={len(trace)} queries "
           f"(batch={args.batch})")
@@ -157,6 +355,64 @@ def main(argv=None):
         print(f"[serve] check OK: all {len(trace)} batched answers "
               f"bit-identical to the sequential reference")
     return 0
+
+
+def _main_supervised(args, g, trace) -> int:
+    """The --recover path: supervised replay under the injected fault
+    plan, optional kill/resume, clean-replay bit-identity check, and
+    the JSON fault report."""
+    plan = FaultPlan(args.inject) if args.inject else None
+    ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="serve_ckpt_")
+    cfg = dict(batch=args.batch, refresh_every=args.refresh_every,
+               theta0=args.theta0, max_theta=args.max_theta,
+               slab=args.slab, solver=args.solver, model=args.model,
+               sampler=args.sampler)
+    print(f"[serve] supervised replay: {len(args.inject)} fault "
+          f"spec(s), ckpt={ckpt}, resume_from={args.resume_from}, "
+          f"kill_after={args.kill_after or 'never'}")
+    answers, service, stats = supervised_replay(
+        g, jax.random.PRNGKey(args.seed), trace,
+        store=CheckpointStore(ckpt, fault_plan=plan), plan=plan,
+        retries=args.retries, backoff_s=args.backoff,
+        start_batch=args.resume_from, stop_after=args.kill_after, **cfg)
+    fired = len(plan.events) if plan else 0
+    print(f"[serve] {len(answers)} answers over {stats['batches']} "
+          f"batch(es); {fired} fault(s) fired, "
+          f"{stats['recoveries']} restore-from-snapshot "
+          f"recover(ies); theta={service.pool.theta} "
+          f"generation={service.generation}")
+
+    report = faults.FaultReport()
+    report.add_events(plan)
+    report.check("replay_completed", True, answers=len(answers),
+                 recoveries=stats["recoveries"], fired=fired)
+    bad = 0
+    if args.check:
+        # Clean reference: a full uninterrupted replay of the same
+        # schedule, no faults, throwaway snapshot dir.  The supervised
+        # answers (a slice when killed/resumed) must match bit-for-bit.
+        with tempfile.TemporaryDirectory() as d:
+            ref, _, _ = supervised_replay(
+                g, jax.random.PRNGKey(args.seed), trace,
+                store=CheckpointStore(d), plan=None, **cfg)
+        lo = args.resume_from * args.batch
+        ref_slice = ref[lo:lo + len(answers)]
+        bad = sum(not answers_equal(a, b)
+                  for a, b in zip(answers, ref_slice))
+        bad += abs(len(answers) - len(ref_slice))
+        report.check("bit_identity_vs_clean_replay", bad == 0,
+                     mismatches=bad, compared=len(ref_slice))
+        if bad:
+            print(f"[serve] FAIL: {bad}/{len(ref_slice)} supervised "
+                  f"answers differ from the clean replay",
+                  file=sys.stderr)
+        else:
+            print(f"[serve] check OK: all {len(ref_slice)} supervised "
+                  f"answers bit-identical to the clean replay")
+    if args.fault_report:
+        report.write(args.fault_report)
+        print(f"[serve] fault report -> {args.fault_report}")
+    return 1 if bad else 0
 
 
 if __name__ == "__main__":

@@ -41,9 +41,19 @@ class PoisonStep(RuntimeError):
 
 
 class RunSupervisor:
-    def __init__(self, store, cfg: Optional[SupervisorConfig] = None):
+    def __init__(self, store, cfg: Optional[SupervisorConfig] = None, *,
+                 sleep_fn: Callable[[float], None] = time.sleep,
+                 clock: Callable[[], float] = time.monotonic,
+                 monitor: Optional["StragglerMonitor"] = None):
+        """``sleep_fn``/``clock`` are injectable so fault tests drive
+        the backoff schedule without real sleeps; ``monitor`` (a
+        :class:`StragglerMonitor`) observes each successful step's
+        wall time."""
         self.store = store
         self.cfg = cfg if cfg is not None else SupervisorConfig()
+        self.sleep_fn = sleep_fn
+        self.clock = clock
+        self.monitor = monitor
         self.failures_at: dict[int, int] = {}
         self.restarts = 0
 
@@ -63,15 +73,23 @@ class RunSupervisor:
                 if step in skip:
                     step += 1
                     continue
+                t0 = self.clock()
                 batch = data_fn(step)
                 state, metrics = step_fn(state, batch)
                 loss = float(metrics["loss"])
                 if not math.isfinite(loss):
                     raise PoisonStep(f"non-finite loss at step {step}")
+                if self.monitor is not None:
+                    self.monitor.observe(self.clock() - t0)
                 if on_metrics:
                     on_metrics(step, metrics)
                 if (step + 1) % self.cfg.checkpoint_every == 0:
                     self.store.save(step + 1, state)
+                # A completed step clears its failure history: a
+                # transient flake much later must start the poison
+                # count from scratch, not tip an old step over
+                # poison_threshold.
+                self.failures_at.pop(step, None)
                 step += 1
                 backoff = self.cfg.backoff_s
             except Exception as e:  # noqa: BLE001 — supervisor boundary
@@ -81,7 +99,7 @@ class RunSupervisor:
                 self.failures_at[step] = self.failures_at.get(step, 0) + 1
                 if self.failures_at[step] >= self.cfg.poison_threshold:
                     skip.add(step)   # data-dependent poison: skip batch
-                time.sleep(min(backoff, 30.0))
+                self.sleep_fn(min(backoff, 30.0))
                 backoff *= self.cfg.backoff_mult
                 restored, ck_step = self.store.restore(state)
                 if restored is not None:
@@ -125,12 +143,29 @@ class StragglerMonitor:
         return current_alpha
 
 
+def usable_machines(requested: int, available: int) -> int:
+    """Largest power-of-two machine count <= min(requested, available)
+    (the all_to_all tiling needs a power of two).  Pure so the
+    non-power-of-two and exhaustion cases are testable without a
+    device backend."""
+    if requested < 1:
+        raise ValueError(
+            f"requested machine count must be >= 1, got {requested}")
+    if available < 1:
+        raise RuntimeError(
+            "no devices available to remesh onto (jax.devices() is "
+            "empty) — an elastic restart needs at least one device; "
+            "check the backend/XLA_FLAGS instead of silently running "
+            "single-machine")
+    m = min(requested, available)
+    return 1 << (m.bit_length() - 1)
+
+
 def elastic_remesh(requested_machines: int):
     """Largest usable device count <= requested (power of two for the
-    all_to_all tiling) and the mesh over it."""
+    all_to_all tiling) and the mesh over it.  Raises on an empty
+    device set instead of silently degrading to m=1."""
     import jax
     from repro.launch.mesh import make_im_mesh
-    avail = len(jax.devices())
-    m = min(requested_machines, avail)
-    m = 1 << int(math.log2(max(m, 1)))
+    m = usable_machines(requested_machines, len(jax.devices()))
     return make_im_mesh(m), m

@@ -5,9 +5,11 @@ import numpy as np
 import pytest
 
 from repro.checkpoint.store import CheckpointStore
+from repro.runtime import faults
 from repro.runtime.fault_tolerance import (RunSupervisor,
                                            StragglerMonitor,
-                                           SupervisorConfig)
+                                           SupervisorConfig,
+                                           usable_machines)
 
 
 def _tree():
@@ -81,6 +83,135 @@ def test_supervisor_skips_poison_step(tmp_path):
                            num_steps=6)
     assert final == 6
     assert 3 in sup.failures_at
+
+
+def test_checkpoint_nonbiufc_integer_view_roundtrip(tmp_path):
+    """bfloat16 / fp8 leaves are stored as same-width integer VIEWS
+    on disk (numpy can't roundtrip ml_dtypes) and restore re-views
+    them per the manifest dtype — values and dtypes both exact."""
+    t = {"bf": jnp.asarray([1.5, -2.25, 3.0e2, 0.0], jnp.bfloat16),
+         "f8": jnp.asarray([0.5, -1.0, 2.0], jnp.float8_e4m3fn),
+         "f32": jnp.asarray([1.0, 2.0], jnp.float32)}
+    store = CheckpointStore(str(tmp_path))
+    store.save(1, t, blocking=True)
+    # On disk: integer views of the right width (leaves are flattened
+    # in sorted-key order: bf, f32, f8).
+    d = os.path.join(str(tmp_path), "step_000000001")
+    assert np.load(os.path.join(d, "leaf_00000.npy")).dtype == np.uint16
+    assert np.load(os.path.join(d, "leaf_00001.npy")).dtype == np.float32
+    assert np.load(os.path.join(d, "leaf_00002.npy")).dtype == np.uint8
+    restored, step = store.restore(t)
+    assert step == 1
+    assert restored["bf"].dtype == jnp.bfloat16
+    assert restored["f8"].dtype == jnp.float8_e4m3fn
+    np.testing.assert_array_equal(
+        np.asarray(restored["bf"]).view(np.uint16),
+        np.asarray(t["bf"]).view(np.uint16))
+    np.testing.assert_array_equal(
+        np.asarray(restored["f8"]).view(np.uint8),
+        np.asarray(t["f8"]).view(np.uint8))
+
+
+def test_checkpoint_resave_same_step_survives_gc(tmp_path):
+    """Re-saving an existing step replaces it atomically, and gc of
+    older steps leaves the freshly rewritten step intact."""
+    store = CheckpointStore(str(tmp_path), keep=2)
+    store.save(1, {"x": jnp.asarray(10)}, blocking=True)
+    store.save(2, {"x": jnp.asarray(20)}, blocking=True)
+    store.save(2, {"x": jnp.asarray(21)}, blocking=True)   # rewrite
+    store.save(3, {"x": jnp.asarray(30)}, blocking=True)   # gc step 1
+    assert store.list_steps() == [2, 3]
+    restored, step = store.restore({"x": jnp.asarray(0)}, step=2)
+    assert step == 2 and int(restored["x"]) == 21
+
+
+def test_checkpoint_write_fault_and_clear_error(tmp_path):
+    """An injected write failure surfaces on the BLOCKING save that
+    caused it (not silently deferred); clear_error acknowledges it and
+    the deterministic retry then publishes the step."""
+    plan = faults.FaultPlan(
+        [faults.FaultSpec("checkpoint.write", "write_fail", at=0)])
+    store = CheckpointStore(str(tmp_path), fault_plan=plan)
+    with pytest.raises(faults.InjectedFault):
+        store.save(7, {"x": jnp.asarray(1)}, blocking=True)
+    assert store.list_steps() == []        # nothing partial published
+    err = store.clear_error()
+    assert isinstance(err, faults.InjectedFault)
+    store.save(7, {"x": jnp.asarray(1)}, blocking=True)
+    assert store.list_steps() == [7]
+
+
+def test_supervisor_injectable_clock_and_sleep(tmp_path):
+    """Backoff goes through the injectable sleep_fn (no real sleeps)
+    and step wall-times through the injectable clock into the
+    monitor."""
+    store = CheckpointStore(str(tmp_path))
+    cfg = SupervisorConfig(checkpoint_every=100, backoff_s=2.0,
+                           max_restarts=10)
+    sleeps, ticks = [], iter(range(1000))
+    mon = StragglerMonitor()
+    sup = RunSupervisor(store, cfg, sleep_fn=sleeps.append,
+                        clock=lambda: float(next(ticks)), monitor=mon)
+    boom = {"armed": True}
+
+    def step_fn(state, batch):
+        if batch == 2 and boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("flake")
+        return state, {"loss": 1.0}
+
+    _, final = sup.run({"x": jnp.asarray(0)}, step_fn, lambda s: s,
+                       num_steps=4)
+    assert final == 4
+    assert sleeps == [2.0]                 # recorded, never slept
+    assert mon.mean is not None            # observed step durations
+
+
+def test_supervisor_resets_failure_counter_on_success(tmp_path):
+    """A step that eventually completes clears its failure history:
+    a transient flake much later at the same step index must start
+    from zero, not tip it over poison_threshold and skip the batch."""
+    store = CheckpointStore(str(tmp_path))
+    cfg = SupervisorConfig(checkpoint_every=1, backoff_s=0.0,
+                           poison_threshold=2, max_restarts=10)
+    sup = RunSupervisor(store, cfg, sleep_fn=lambda s: None)
+    fails = {3: 1, 5: 1}   # one transient failure each at steps 3, 5
+    seen = []
+
+    def step_fn(state, batch):
+        if fails.get(batch, 0) > 0:
+            fails[batch] -= 1
+            raise RuntimeError(f"flake at {batch}")
+        seen.append(batch)
+        return state, {"loss": 1.0}
+
+    _, final = sup.run({"x": jnp.asarray(0)}, step_fn, lambda s: s,
+                       num_steps=7)
+    assert final == 7
+    assert sup.failures_at == {}           # both cleared on success
+    # every step actually executed (none poisoned/skipped), including
+    # the checkpoint-rollback replays
+    assert set(seen) == set(range(7))
+
+
+def test_usable_machines_non_power_of_two_and_exhaustion():
+    assert usable_machines(6, 8) == 4      # non-power-of-two request
+    assert usable_machines(8, 5) == 4      # non-power-of-two supply
+    assert usable_machines(3, 8) == 2
+    assert usable_machines(1, 1) == 1
+    assert usable_machines(16, 16) == 16
+    with pytest.raises(RuntimeError, match="no devices available"):
+        usable_machines(4, 0)              # empty jax.devices()
+    with pytest.raises(ValueError, match=">= 1"):
+        usable_machines(0, 8)
+
+
+def test_elastic_remesh_raises_on_zero_devices(monkeypatch):
+    import jax as jax_mod
+    from repro.runtime import fault_tolerance as ft
+    monkeypatch.setattr(jax_mod, "devices", lambda *a, **k: [])
+    with pytest.raises(RuntimeError, match="no devices available"):
+        ft.elastic_remesh(4)
 
 
 def test_straggler_monitor_flags_outlier():

@@ -1,0 +1,256 @@
+"""Deterministic fault injection + the resilient round
+(repro.runtime.faults): plan semantics, survivors-mask bit-identity,
+m-independence, NaN detection, straggler-driven alpha shrink."""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitset, maxcover, randgreedi
+from repro.runtime import faults
+from repro.runtime.fault_tolerance import StragglerMonitor
+
+
+# ---------------------------------------------------------------------
+# FaultSpec / parse / plan semantics (no jax needed)
+# ---------------------------------------------------------------------
+
+def test_spec_validation():
+    faults.FaultSpec("local.greedy", "drop", 1)
+    with pytest.raises(ValueError, match="unknown injection site"):
+        faults.FaultSpec("bogus.site", "raise")
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        faults.FaultSpec("local.greedy", "explode")
+    with pytest.raises(ValueError, match="does not apply"):
+        faults.FaultSpec("service.answer", "drop")   # drop: greedy only
+    with pytest.raises(ValueError, match="does not apply"):
+        faults.FaultSpec("local.greedy", "write_fail")
+    with pytest.raises(ValueError, match=">= 0"):
+        faults.FaultSpec("local.greedy", "drop", at=-1)
+
+
+def test_parse_fault_forms():
+    s = faults.parse_fault("local.greedy:delay:2:0.05")
+    assert s == faults.FaultSpec("local.greedy", "delay", 2, 0.05)
+    assert faults.parse_fault("checkpoint.write:write_fail") == \
+        faults.FaultSpec("checkpoint.write", "write_fail", 0, 0.0)
+    for bad in ("local.greedy", "a:b:c:d:e", "local.greedy:delay:x",
+                "local.greedy:delay:0:y"):
+        with pytest.raises(ValueError):
+            faults.parse_fault(bad)
+    with pytest.raises(argparse.ArgumentTypeError):
+        faults.cli_fault_arg("nope:raise")
+
+
+def test_plan_occurrence_counters_and_events():
+    sleeps = []
+    plan = faults.FaultPlan(
+        [faults.FaultSpec("service.answer", "raise", at=1),
+         faults.FaultSpec("service.answer", "delay", at=2, arg=0.5)],
+        sleep_fn=sleeps.append)
+    assert plan.fire("service.answer") is None          # occurrence 0
+    with pytest.raises(faults.InjectedFault) as ei:
+        plan.fire("service.answer")                     # occurrence 1
+    assert ei.value.site == "service.answer"
+    assert ei.value.occurrence == 1
+    spec = plan.fire("service.answer")                  # occurrence 2
+    assert spec.kind == "delay" and sleeps == [0.5]
+    assert plan.occurrences("service.answer") == 3
+    assert plan.occurrences("local.greedy") == 0
+    assert [e["occurrence"] for e in plan.events] == [1, 2]
+    # None-safe module-level helper
+    assert faults.fire(None, "service.answer") is None
+    with pytest.raises(ValueError):
+        plan.fire("not.a.site")
+
+
+def test_fault_report_checks_and_merge(tmp_path):
+    inner = faults.FaultReport()
+    inner.check("sub", True)
+    p = tmp_path / "inner.json"
+    inner.write(str(p))
+    rep = faults.FaultReport()
+    assert rep.check("good", True) and rep.ok
+    rep.merge_file(str(p))
+    assert rep.ok
+    rep.check("bad", False, detail=42)
+    assert not rep.ok
+    d = rep.to_dict()
+    assert d["pass"] is False and len(d["checks"]) == 2
+    assert d["merged"][0]["pass"] is True
+
+
+# ---------------------------------------------------------------------
+# Resilient round
+# ---------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def rows():
+    rng = np.random.default_rng(7)
+    dense = rng.random((64, 256)) < 0.08
+    return bitset.pack_bool_matrix(jnp.asarray(dense))
+
+
+KEY = jax.random.key(3)
+M, K = 4, 6
+
+
+def _bit_equal(a, b):
+    return (np.array_equal(np.asarray(a.seeds), np.asarray(b.seeds))
+            and int(a.coverage) == int(b.coverage)
+            and np.array_equal(np.asarray(a.covered),
+                               np.asarray(b.covered)))
+
+
+def test_drop_equals_clean_survivors_run(rows):
+    plan = faults.FaultPlan([faults.FaultSpec("local.greedy", "drop",
+                                              at=2)])
+    res, survivors, alpha = faults.resilient_randgreedi(
+        rows, KEY, m=M, k=K, plan=plan)
+    assert survivors == (0, 1, 3) and alpha == 1.0
+    clean = randgreedi.randgreedi_maxcover(rows, KEY, m=M, k=K,
+                                           survivors=(0, 1, 3))
+    assert _bit_equal(res, clean)
+
+
+def test_raise_kills_machine_like_drop(rows):
+    by_raise, s1, _ = faults.resilient_randgreedi(
+        rows, KEY, m=M, k=K,
+        plan=faults.FaultPlan([faults.FaultSpec("local.greedy",
+                                                "raise", at=0)]))
+    by_drop, s2, _ = faults.resilient_randgreedi(
+        rows, KEY, m=M, k=K,
+        plan=faults.FaultPlan([faults.FaultSpec("local.greedy",
+                                                "drop", at=0)]))
+    assert s1 == s2 == (1, 2, 3)
+    assert _bit_equal(by_raise, by_drop)
+
+
+def test_m_independence_of_lost_partition(rows):
+    """Thm 3.1 made executable: corrupt the dropped partition's rows
+    to maximum damage — the merged result must not change."""
+    plan = lambda: faults.FaultPlan(  # noqa: E731
+        [faults.FaultSpec("local.greedy", "drop", at=1)])
+    res, survivors, _ = faults.resilient_randgreedi(
+        rows, KEY, m=M, k=K, plan=plan())
+    blocks = randgreedi.partition_blocks(rows.shape[0], M, KEY)
+    garbage = np.asarray(rows).copy()
+    garbage[blocks[1]] = 0xFFFFFFFF
+    res_g, surv_g, _ = faults.resilient_randgreedi(
+        jnp.asarray(garbage), KEY, m=M, k=K, plan=plan())
+    assert surv_g == survivors
+    assert _bit_equal(res, res_g)
+
+
+def test_nan_poison_detected_and_dropped(rows):
+    plan = faults.FaultPlan([faults.FaultSpec("local.greedy", "nan",
+                                              at=3)])
+    res, survivors, _ = faults.resilient_randgreedi(
+        rows, KEY, m=M, k=K, plan=plan)
+    assert survivors == (0, 1, 2)
+    clean = randgreedi.randgreedi_maxcover(rows, KEY, m=M, k=K,
+                                           survivors=(0, 1, 2))
+    assert _bit_equal(res, clean)
+
+
+def test_all_partitions_lost_raises(rows):
+    plan = faults.FaultPlan(
+        [faults.FaultSpec("local.greedy", "drop", at=j)
+         for j in range(M)])
+    with pytest.raises(faults.PartitionsLostError):
+        faults.resilient_randgreedi(rows, KEY, m=M, k=K, plan=plan)
+
+
+def test_merge_retry_on_receiver_fault(rows):
+    plan = faults.FaultPlan(
+        [faults.FaultSpec("receiver.insert", "raise", at=0)])
+    res, _, _ = faults.resilient_randgreedi(rows, KEY, m=M, k=K,
+                                            plan=plan)
+    clean = randgreedi.randgreedi_maxcover(rows, KEY, m=M, k=K)
+    assert _bit_equal(res, clean)
+    # past the retry budget the fault surfaces
+    plan = faults.FaultPlan(
+        [faults.FaultSpec("receiver.insert", "raise", at=j)
+         for j in range(3)])
+    with pytest.raises(faults.InjectedFault):
+        faults.resilient_randgreedi(rows, KEY, m=M, k=K, plan=plan,
+                                    merge_retries=2)
+
+
+def test_straggler_delay_shrinks_alpha(rows):
+    """Injected delays (through the plan's recorded sleep_fn, no real
+    sleeping) plus a fake clock trip the StragglerMonitor and shrink
+    alpha_trunc through suggest_alpha (paper §3.3.2)."""
+    sleeps = []
+    plan = faults.FaultPlan(
+        [faults.FaultSpec("local.greedy", "delay", at=j, arg=0.01)
+         for j in (3, 4, 5)], sleep_fn=sleeps.append)
+    ticks, t = [], 0.0
+    for d in (1.0, 1.0, 1.0, 1e3, 1e6, 1e9):   # 3 escalating outliers
+        ticks.extend((t, t + d))
+        t += d + 1.0
+    it = iter(ticks)
+    mon = StragglerMonitor()
+    res, survivors, alpha = faults.resilient_randgreedi(
+        rows, KEY, m=6, k=K, plan=plan, monitor=mon,
+        alpha_trunc=1.0, clock=lambda: next(it))
+    assert len(survivors) == 6          # stragglers are slow, not dead
+    assert mon.flags >= 3 and alpha == 0.5
+    assert sleeps == [0.01] * 3
+
+
+# ---------------------------------------------------------------------
+# randgreedi survivors kwarg
+# ---------------------------------------------------------------------
+
+def test_survivors_all_alive_is_inert(rows):
+    a = randgreedi.randgreedi_maxcover(rows, KEY, m=M, k=K)
+    b = randgreedi.randgreedi_maxcover(rows, KEY, m=M, k=K,
+                                       survivors=tuple(range(M)))
+    assert _bit_equal(a, b)
+
+
+def test_survivors_validation(rows):
+    for bad in ((), (0, M), (-1,)):
+        with pytest.raises(ValueError):
+            randgreedi.randgreedi_maxcover(rows, KEY, m=M, k=K,
+                                           survivors=bad)
+
+
+def test_survivor_seeds_come_from_surviving_partitions(rows):
+    survivors = (0, 2)
+    res = randgreedi.randgreedi_maxcover(rows, KEY, m=M, k=K,
+                                         survivors=survivors)
+    blocks = randgreedi.partition_blocks(rows.shape[0], M, KEY)
+    allowed = set(blocks[list(survivors)].reshape(-1).tolist())
+    seeds = np.asarray(res.seeds)
+    assert set(seeds[seeds >= 0].tolist()) <= allowed
+    assert int(res.coverage) > 0
+    # winning cover popcounts to the reported coverage
+    assert int(bitset.coverage_size(res.covered)) == int(res.coverage)
+
+
+def test_survivors_greedy_aggregator_matches_manual(rows):
+    """Greedy-aggregated survivors run == manually aggregating the
+    surviving machines' local picks (machine identity preserved)."""
+    survivors = (1, 3)
+    res = randgreedi.randgreedi_maxcover(rows, KEY, m=M, k=K,
+                                         aggregator="greedy",
+                                         survivors=survivors)
+    blocks = randgreedi.partition_blocks(rows.shape[0], M, KEY)
+    sent_ids, sent_rows = [], []
+    local_cov = []
+    for j in survivors:
+        ids = blocks[j]
+        sol = maxcover.greedy_maxcover(rows[jnp.asarray(ids)], K)
+        picks = np.asarray(sol.seeds)
+        sent_ids.append(np.where(picks >= 0,
+                                 ids[np.clip(picks, 0, None)], -1))
+        sent_rows.append(np.asarray(sol.rows))
+        local_cov.append(int(sol.coverage))
+    agg = maxcover.greedy_maxcover(
+        jnp.asarray(np.concatenate(sent_rows)), K)
+    expected = max(int(agg.coverage), max(local_cov))
+    assert int(res.coverage) == expected

@@ -305,3 +305,43 @@ np.testing.assert_array_equal(np.asarray(sa), np.asarray(sb))
 print("unroll ok", int(ca))
 """)
     assert "unroll ok" in out
+
+
+def test_survivors_mask_on_mesh():
+    """Partition-loss tolerance through the SPMD round: an all-alive
+    survivors mask is bit-inert, and masking out one machine removes
+    exactly its partition's candidates (its vertices contribute no
+    seeds) while the round stays valid."""
+    out = run_with_devices(_PRELUDE + textwrap.dedent("""
+        fn, _, _ = greediris.build_round(
+            mesh, ("machines",), n=200, theta=512, k=8,
+            max_degree=g.max_in_degree())
+        base = jax.jit(fn)(nbr, prob, wt, key)
+        fn_all, _, _ = greediris.build_round(
+            mesh, ("machines",), n=200, theta=512, k=8,
+            max_degree=g.max_in_degree(),
+            survivors=tuple(range(8)))
+        alive = jax.jit(fn_all)(nbr, prob, wt, key)
+        np.testing.assert_array_equal(np.asarray(base.seeds),
+                                      np.asarray(alive.seeds))
+        assert int(base.coverage) == int(alive.coverage)
+
+        drop = 5
+        surv = tuple(j for j in range(8) if j != drop)
+        fn_d, _, _ = greediris.build_round(
+            mesh, ("machines",), n=200, theta=512, k=8,
+            max_degree=g.max_in_degree(), survivors=surv)
+        o = jax.jit(fn_d)(nbr, prob, wt, key)
+        seeds = np.asarray(o.seeds)
+        valid = seeds[seeds >= 0]
+        # the dead machine's vertex partition contributes no seeds
+        shard = 200 // 8 + (1 if 200 % 8 else 0)
+        dead = set(range(drop * shard, min((drop + 1) * shard, 200)))
+        assert not (set(valid.tolist()) & dead), (valid, drop)
+        assert len(set(valid.tolist())) == len(valid)
+        assert int(o.coverage) > 0
+        assert int(o.coverage) <= int(base.coverage)
+        print("base", int(base.coverage), "dropped", int(o.coverage),
+              "OK")
+    """))
+    assert "OK" in out

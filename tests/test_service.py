@@ -254,3 +254,155 @@ def test_admit_validates(graph):
 def test_per_query_state_bytes_model():
     # covered words + seed slots + gain slots + exclusion slots, 4B each
     assert svc.per_query_state_bytes(8, 3, 1) == 4 * (8 + 3 + 3 + 1)
+
+
+# ---------------------------------------------------------------------
+# Recovery: snapshot/restore, from_pool, retry, degraded serve
+# ---------------------------------------------------------------------
+
+def test_pool_snapshot_restore_bit_identical(graph, tmp_path):
+    """pool_state -> CheckpointStore -> pool_from_state reconstructs
+    the pool bit-for-bit, INCLUDING the PRNG stream: a post-restore
+    refresh appends the same salted slabs as the original would."""
+    from repro.checkpoint.store import CheckpointStore
+    pool = svc.make_pool(graph, jax.random.PRNGKey(7), theta=256,
+                         slab=128)
+    pool = svc.refresh(pool, 512)          # generation 1, mixed salts
+    store = CheckpointStore(str(tmp_path))
+    step = svc.snapshot_pool(store, pool)
+    assert step == pool.generation
+    p2, got = svc.restore_pool(store, graph)
+    assert got == step
+    np.testing.assert_array_equal(np.asarray(pool.r1), np.asarray(p2.r1))
+    np.testing.assert_array_equal(np.asarray(pool.r2), np.asarray(p2.r2))
+    np.testing.assert_array_equal(pool.salt, p2.salt)
+    assert (p2.theta, p2.generation, p2.slab, p2.model, p2.sampler) == \
+        (pool.theta, pool.generation, pool.slab, pool.model, pool.sampler)
+    a, b = svc.refresh(pool, 1024), svc.refresh(p2, 1024)
+    np.testing.assert_array_equal(np.asarray(a.r1), np.asarray(b.r1))
+    np.testing.assert_array_equal(a.salt, b.salt)
+
+
+def test_pool_snapshot_restore_typed_key(graph, tmp_path):
+    from repro.checkpoint.store import CheckpointStore
+    pool = svc.make_pool(graph, jax.random.key(11), theta=128, slab=128)
+    store = CheckpointStore(str(tmp_path))
+    svc.snapshot_pool(store, pool)
+    p2, _ = svc.restore_pool(store, graph)
+    assert jax.numpy.issubdtype(p2.key.dtype, jax.dtypes.prng_key)
+    np.testing.assert_array_equal(np.asarray(svc.refresh(pool, 256).r1),
+                                  np.asarray(svc.refresh(p2, 256).r1))
+
+
+def test_restore_pool_empty_store(graph, tmp_path):
+    from repro.checkpoint.store import CheckpointStore
+    pool, step = svc.restore_pool(CheckpointStore(str(tmp_path)), graph)
+    assert pool is None and step == -1
+
+
+def test_from_pool_service_resumes_bit_identical(graph):
+    """A service rebuilt around a restored pool answers exactly like
+    the one that never died, and future refreshes continue the same
+    generation/salt stream."""
+    s1 = InfluenceService(graph, jax.random.PRNGKey(3), theta0=128,
+                          max_theta=2048, slab=128)
+    (a1,) = s1.answer([s1.admit(Query(k=3))])
+    s2 = InfluenceService.from_pool(s1.pool, theta0=128, max_theta=2048)
+    assert s2.generation == s1.generation
+    (a2,) = s2.answer([s2.admit(Query(k=3))])
+    np.testing.assert_array_equal(a1.seeds, a2.seeds)
+    assert a1[1:] == a2[1:]
+    s1.refresh(), s2.refresh()
+    np.testing.assert_array_equal(np.asarray(s1.pool.r1),
+                                  np.asarray(s2.pool.r1))
+
+
+def test_answer_with_retry_injected_fault(graph):
+    from repro.runtime.faults import FaultPlan, FaultSpec, InjectedFault
+    plan = FaultPlan([FaultSpec("service.answer", "raise", at=1)])
+    s = InfluenceService(graph, jax.random.PRNGKey(3), theta0=128,
+                         max_theta=2048, slab=128, fault_plan=plan)
+    (ref,) = s.answer([s.admit(Query(k=3))])      # occurrence 0: clean
+    sleeps = []
+    (got,) = svc.answer_with_retry(s, [s.admit(Query(k=3))],
+                                   backoff_s=0.5, sleep_fn=sleeps.append)
+    np.testing.assert_array_equal(ref.seeds, got.seeds)
+    assert sleeps == [0.5]                 # backoff recorded, not slept
+    assert [e["site"] for e in plan.events] == ["service.answer"]
+    # a persistent fault re-raises once the budget is exhausted
+    plan2 = FaultPlan([FaultSpec("service.answer", "raise", at=i)
+                       for i in range(4)])
+    s2 = InfluenceService(graph, jax.random.PRNGKey(3), theta0=128,
+                          max_theta=2048, slab=128, fault_plan=plan2)
+    t = s2.admit(Query(k=2))
+    with pytest.raises(InjectedFault):
+        svc.answer_with_retry(s2, [t], retries=1, sleep_fn=lambda s: None)
+
+
+def test_answer_with_retry_stale_generation(graph):
+    """Tickets whose generation was retired are re-admitted on the
+    current generation and answered there."""
+    s = InfluenceService(graph, jax.random.PRNGKey(3), theta0=128,
+                         max_theta=2048, slab=128)
+    t = s.admit(Query(k=3))
+    s.release([t])          # drained -> next refresh retires gen
+    s.refresh()
+    with pytest.raises(StaleGenerationError):
+        s.answer([t])
+    (a,) = svc.answer_with_retry(s, [t])
+    assert a.generation == s.generation
+    (ref,) = s.answer([s.admit(Query(k=3))])
+    np.testing.assert_array_equal(a.seeds, ref.seeds)
+
+
+def test_release_drains_generation(graph):
+    s = InfluenceService(graph, jax.random.PRNGKey(3), theta0=128,
+                         max_theta=2048, slab=128)
+    t = s.admit(Query(k=3))
+    gen = t.generation
+    assert s.inflight(gen) == 1
+    s.refresh()
+    assert gen in s._pools                 # draining
+    s.release([t])
+    assert gen not in s._pools             # retired on release
+    assert s.inflight(gen) == 0
+
+
+def test_serve_deadline_returns_degraded_with_bound(graph):
+    """A deadline cuts the theta-doubling loop short: uncertified
+    answers come back degraded=True, carrying their opim.certify
+    lower bound instead of looping or raising."""
+    s = InfluenceService(graph, jax.random.PRNGKey(3), theta0=128,
+                         max_theta=1 << 14, slab=128)
+    ticks = iter([0.0, 10.0, 20.0, 30.0, 40.0, 50.0])
+    answers = s.serve([Query(k=3, eps=0.0)], deadline_s=5.0,
+                      clock=lambda: next(ticks))
+    (a,) = answers
+    assert a.degraded and not a.certified
+    assert a.sigma_lower > 0 and 0 < a.guarantee < 1
+    assert s.pool.theta < s.max_theta      # stopped by time, not theta
+
+
+def test_serve_max_theta_marks_degraded(graph):
+    s = InfluenceService(graph, jax.random.PRNGKey(3), theta0=128,
+                         max_theta=256, slab=128)
+    answers = s.serve([Query(k=3, eps=0.0), Query(k=2, eps=0.45)])
+    for a in answers:
+        assert a.degraded == (not a.certified)
+    assert any(a.degraded for a in answers)
+
+
+def test_certified_serve_answers_not_degraded(graph):
+    s = InfluenceService(graph, jax.random.PRNGKey(3), theta0=128,
+                         max_theta=2048, slab=128)
+    answers = s.serve([Query(k=3, eps=0.45)])
+    assert all(a.certified and not a.degraded for a in answers)
+
+
+def test_sampler_slab_fill_site_fires_per_slab(graph):
+    from repro.runtime.faults import FaultPlan, InjectedFault
+    plan = FaultPlan([])
+    svc.make_pool(graph, jax.random.PRNGKey(1), theta=256, slab=128,
+                  plan=plan)
+    # 2 slabs x 2 OPIM halves = 4 probes
+    assert plan.occurrences("sampler.slab_fill") == 4

@@ -81,3 +81,45 @@ def test_im_driver_flag_validation_messages(capsys):
         assert ei.value.code == 2
         err = capsys.readouterr().err
         assert needle in err, (extra, err)
+
+
+def test_fault_injection_flag_validation_messages(capsys):
+    """Bad --faults / --inject specs and inconsistent recovery flags
+    fail at the argparse boundary (SystemExit 2 + actionable stderr),
+    never deep inside a replay."""
+    import pytest
+    from repro.launch import im_driver, serve
+
+    im_cases = [
+        (["--faults", "nope.site:raise"], "unknown injection site"),
+        (["--faults", "local.greedy:explode"], "unknown fault kind"),
+        (["--faults", "service.answer:drop"], "does not apply"),
+        (["--faults", "local.greedy:drop:x"], "occurrence index"),
+        (["--fault-report", "r.json"], "--fault-report needs --faults"),
+    ]
+    for extra, needle in im_cases:
+        with pytest.raises(SystemExit) as ei:
+            im_driver.main(["--n", "64", "--k", "2"] + extra)
+        assert ei.value.code == 2
+        err = capsys.readouterr().err
+        assert needle in err, (extra, err)
+
+    serve_cases = [
+        (["--inject", "service.answer:raise:1"],
+         "--inject requires --recover"),
+        (["--inject", "bogus:raise", "--recover"],
+         "unknown injection site"),
+        (["--inject", "local.greedy:write_fail", "--recover"],
+         "does not apply"),
+        (["--recover", "--kill-after", "-1"], "--kill-after"),
+        (["--recover", "--resume-from", "1"],
+         "--resume-from needs --ckpt-dir"),
+        (["--kill-after", "2"], "require --recover"),
+        (["--recover", "--retries", "-2"], "--retries"),
+    ]
+    for extra, needle in serve_cases:
+        with pytest.raises(SystemExit) as ei:
+            serve.main(["--n", "64", "--queries", "4"] + extra)
+        assert ei.value.code == 2
+        err = capsys.readouterr().err
+        assert needle in err, (extra, err)
